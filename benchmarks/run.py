@@ -1,0 +1,29 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline analysis (which
+needs the 512-device placeholder config) lives in benchmarks/roofline.py
+and is invoked separately:
+
+  PYTHONPATH=src python -m benchmarks.run                  # paper tables
+  PYTHONPATH=src python -m benchmarks.roofline --all       # §Roofline
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_tables as T
+
+    print("name,us_per_call,derived")
+    T.table_5_8_lut_sizes()
+    T.fig_2_3_accuracy_by_precision()
+    T.table_1_3_prior_art_gap()
+    T.fig_4_sum_distributions()
+    fast = "--fast" in sys.argv
+    T.table_2_end_to_end(steps=30 if fast else 120)
+
+
+if __name__ == "__main__":
+    main()

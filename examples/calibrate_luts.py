@@ -1,0 +1,50 @@
+"""LUT calibration walkthrough — the paper's §5.3 / Fig. 4 procedure.
+
+Collects Σe^x statistics from a model's real attention logits, sizes
+LUT_α accordingly, and shows the accuracy difference between the
+default (NLP, 1×16) table and the calibrated one on the worst rows.
+
+  PYTHONPATH=src python examples/calibrate_luts.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, RunConfig
+from repro.core import (SumCollector, build_rexp_tables, softmax_exact,
+                        softmax_rexp)
+from repro.models import build_model
+from repro.runtime.train_loop import init_train_state
+
+ARCH = ARCHS["internlm2-20b"].scaled_down(d_model=128, n_heads=4, vocab=512,
+                                          n_periods=2)
+model = build_model(ARCH)
+run = RunConfig(dtype="float32", attention_backend="naive",
+                scan_layers=False)  # collector needs the unrolled path
+params = init_train_state(model, jax.random.PRNGKey(0), run).params
+
+collector = SumCollector()
+for seed in range(4):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (4, 64), 0,
+                                ARCH.vocab_size)
+    model.train_logits(params, tokens, run, collector=collector)
+res = collector.result()
+print(f"Σe^x over {res.count} attention rows: mean={res.mean:.1f} "
+      f"p99={res.p99:.1f} max={res.max:.1f}")
+alpha_len = res.recommend_alpha_len()
+print(f"recommended LUT_alpha length: {alpha_len} "
+      f"(paper NLP default is 16; DETR needed 256–512)")
+
+# Worst-case rows: flat logits whose Σe^x exceeds the default table.
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(0, 0.3, (64, 128)).astype(np.float32))
+exact = softmax_exact(x)
+for name, t in (("default(1x16)", build_rexp_tables("uint8")),
+                ("calibrated", build_rexp_tables("uint8", 192))):
+    y = softmax_rexp(x, t)
+    tv = float(jnp.mean(jnp.sum(jnp.abs(y - exact), -1)) / 2)
+    zeros = float(jnp.mean(jnp.sum(y, -1) == 0))
+    print(f"  {name:14s} TV distance {tv:.3f}, collapsed rows "
+          f"{zeros:5.1%}  (bytes: {t.nbytes})")
+print("— the Fig. 4 lesson: size LUT_alpha from the observed Σe^x tail.")

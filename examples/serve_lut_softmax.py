@@ -1,0 +1,77 @@
+"""End-to-end serving driver — the paper's deployment scenario.
+
+Trains a small LM briefly (so the weights are meaningful), then serves a
+batch of prompts twice — exact softmax vs REXP-uint8 LUT softmax — and
+reports token agreement and logit drift.  This is the inference-side
+counterpart of the paper's Table 2 protocol, runnable on one CPU.
+
+  PYTHONPATH=src python examples/serve_lut_softmax.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, RunConfig
+from repro.core.policies import SoftmaxPolicy
+from repro.data.synthetic import DataConfig, SyntheticDataset
+from repro.models import build_model
+from repro.runtime.serve_loop import generate
+from repro.runtime.train_loop import init_train_state, make_train_step
+
+ARCH = ARCHS["qwen3-32b"].scaled_down(d_model=128, n_heads=4, vocab=512,
+                                      n_periods=2)
+STEPS, BATCH, SEQ = 80, 16, 64
+
+model = build_model(ARCH)
+train_run = RunConfig(dtype="float32", attention_backend="naive",
+                      scan_layers=True, remat=True, learning_rate=2e-3)
+state = init_train_state(model, jax.random.PRNGKey(0), train_run)
+step_fn = jax.jit(make_train_step(model, train_run))
+ds = SyntheticDataset(DataConfig(ARCH.vocab_size, SEQ, BATCH, seed=0))
+print(f"training {ARCH.name}-mini "
+      f"({sum(x.size for x in jax.tree_util.tree_leaves(state.params)):,} "
+      f"params) for {STEPS} steps…")
+for step in range(STEPS):
+    state, m = step_fn(state, {"tokens": jnp.asarray(ds.batch(step))})
+    if step % 20 == 0:
+        print(f"  step {step:3d} loss {float(m['loss']):.3f}")
+
+prompts = jnp.asarray(ds.batch(9999)[:, :32])
+policies = {
+    "exact": SoftmaxPolicy(),
+    "rexp_uint8": SoftmaxPolicy(impl="rexp", precision="uint8"),
+    "lut2d_uint8": SoftmaxPolicy(impl="lut2d", precision="uint8"),
+    "rexp_uint2": SoftmaxPolicy(impl="rexp", precision="uint2"),
+}
+
+# 1) free-running generation under each policy (compounding: one early
+#    argmax flip reroutes the whole continuation — harsh by design)
+gen = {}
+for name, pol in policies.items():
+    run = RunConfig(dtype="float32", attention_backend="naive",
+                    scan_layers=True, softmax_policy=pol)
+    gen[name] = np.asarray(generate(model, state.params, prompts, run,
+                                    max_new_tokens=24))
+
+# 2) teacher-forced next-token agreement along exact's trajectory
+#    (no compounding — the per-step effect of the approximation)
+traj = jnp.concatenate([prompts, jnp.asarray(gen["exact"])], axis=1)
+tf = {}
+for name, pol in policies.items():
+    run = RunConfig(dtype="float32", attention_backend="naive",
+                    scan_layers=True, softmax_policy=pol)
+    logits, _ = model.prefill(state.params, traj[:, :-1], run,
+                              max_len=traj.shape[1])
+    tf[name] = np.asarray(jnp.argmax(logits[:, 31:], -1))
+ref_tf = tf["exact"]
+
+print("\nbatched serving, 16 prompts × 24 new tokens each:")
+print(f"  {'policy':12s} {'teacher-forced step agreement':>30s} "
+      f"{'free-running agreement':>24s}")
+for name in policies:
+    a_tf = float((tf[name] == ref_tf).mean())
+    a_fr = float((gen[name] == gen["exact"]).mean())
+    print(f"  {name:12s} {a_tf:>29.1%} {a_fr:>23.1%}")
+print("(paper's claim: 8-bit LUT softmax ≈ exact per step; 2-bit "
+      "degrades.  Free-running agreement compounds single flips.)")

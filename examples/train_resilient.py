@@ -1,0 +1,51 @@
+"""Fault-tolerant training walkthrough: deterministic data + atomic
+checkpoints + failure injection + bit-exact resume.
+
+  PYTHONPATH=src python examples/train_resilient.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCHS, RunConfig
+from repro.data.synthetic import DataConfig, SyntheticDataset
+from repro.models import build_model
+from repro.runtime.fault_tolerance import ResilientTrainer
+from repro.runtime.train_loop import init_train_state, make_train_step
+
+ARCH = ARCHS["granite-moe-3b-a800m"].scaled_down(d_model=64, n_heads=4,
+                                                 vocab=256, n_periods=2)
+model = build_model(ARCH)
+run = RunConfig(dtype="float32", attention_backend="naive",
+                scan_layers=True, learning_rate=2e-3)
+state = init_train_state(model, jax.random.PRNGKey(0), run)
+step_fn = jax.jit(make_train_step(model, run))
+ds = SyntheticDataset(DataConfig(256, 32, 8, seed=0))
+
+boom = {"armed": True}
+
+
+def failure_hook(step):
+    if step == 12 and boom["armed"]:
+        boom["armed"] = False
+        print("  !! injected node failure at step 12")
+        raise RuntimeError("simulated preemption")
+
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    trainer = ResilientTrainer(step_fn, CheckpointManager(ckpt_dir, keep_n=2),
+                               checkpoint_every=5, step_deadline_s=30.0)
+    final, report = trainer.run(
+        state, lambda s: {"tokens": jnp.asarray(ds.batch(s))}, n_steps=20,
+        failure_hook=failure_hook,
+        metrics_cb=lambda s, m: s % 5 == 0 and print(
+            f"  step {s:2d} loss {m['loss']:.3f}"))
+    print(f"\nreport: {report.steps_run} steps, "
+          f"{report.failures_recovered} failure(s) recovered, "
+          f"{report.straggler_events} straggler events")
+    print("the deterministic (seed, step)->batch pipeline makes the "
+          "recovered run bit-identical to an uninterrupted one "
+          "(tests/test_checkpoint_and_ft.py proves it).")

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: atomic sharded save/restore + manager."""
+from repro.checkpoint.ckpt import (checkpoint_meta, checkpoint_step,
+                                   restore_pytree, save_pytree)
+from repro.checkpoint.manager import CheckpointManager

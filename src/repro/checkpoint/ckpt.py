@@ -1,0 +1,96 @@
+"""Sharded, atomic, mesh-agnostic checkpointing (orbax-free).
+
+Layout::
+
+    <dir>/step_000100.tmp-<nonce>/   ← written first
+        index.json                   ← treedef paths, shapes, dtypes, meta
+        a0000.npy … aNNNN.npy        ← one file per leaf
+    <dir>/step_000100/               ← atomic rename on completion
+
+Properties needed at 1000-node scale, all present in miniature:
+  * **atomic publish** — a checkpoint either exists completely or not at
+    all (tmp-dir + rename); a crash mid-save can never corrupt restores.
+  * **mesh-agnostic** — leaves are stored unsharded (gathered); restore
+    re-shards onto whatever mesh the new jit uses, so elastic rescale
+    (restore on fewer/more devices) is just a different in_sharding.
+    On a real multi-host pod the per-leaf files become per-shard files
+    keyed by shard index; the index format already carries shapes so the
+    extension is mechanical.
+  * **self-describing** — index.json + raw .npy; no pickles.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import secrets
+import shutil
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+INDEX = "index.json"
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_pytree(directory: str, tree: PyTree, step: int,
+                meta: dict | None = None) -> str:
+    """Write an atomic checkpoint; returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + f".tmp-{secrets.token_hex(4)}"
+    os.makedirs(tmp, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    index = {"step": step, "meta": meta or {}, "leaves": []}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"a{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        index["leaves"].append({"path": p, "file": fname,
+                                "shape": list(arr.shape),
+                                "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, INDEX), "w") as f:
+        json.dump(index, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (paths must match)."""
+    with open(os.path.join(path, INDEX)) as f:
+        index = json.load(f)
+    by_path = {e["path"]: e for e in index["leaves"]}
+    paths, leaves, treedef = _flatten_with_paths(like)
+    out = []
+    for p, leaf in zip(paths, leaves):
+        if p not in by_path:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        e = by_path[p]
+        arr = np.load(os.path.join(path, e["file"]))
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {p}: ckpt {arr.shape} "
+                             f"vs model {want}")
+        out.append(arr.astype(str(np.dtype(e["dtype"]))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, INDEX)) as f:
+        return int(json.load(f)["step"])
+
+
+def checkpoint_meta(path: str) -> dict:
+    with open(os.path.join(path, INDEX)) as f:
+        return json.load(f)["meta"]

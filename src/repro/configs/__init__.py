@@ -1,0 +1,45 @@
+"""Assigned architecture registry (10 archs) + shape cells."""
+
+from repro.configs.base import (
+    ArchConfig,
+    LayerSpec,
+    MoESpec,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    shape_applicable,
+)
+
+from repro.configs import (
+    jamba_v0_1_52b,
+    mistral_large_123b,
+    internlm2_20b,
+    codeqwen1_5_7b,
+    qwen3_32b,
+    chameleon_34b,
+    whisper_small,
+    xlstm_125m,
+    deepseek_moe_16b,
+    granite_moe_3b_a800m,
+)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.ARCH.name: m.ARCH
+    for m in (
+        jamba_v0_1_52b, mistral_large_123b, internlm2_20b, codeqwen1_5_7b,
+        qwen3_32b, chameleon_34b, whisper_small, xlstm_125m,
+        deepseek_moe_16b, granite_moe_3b_a800m,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; available: {sorted(ARCHS)}") from None
+
+
+__all__ = ["ArchConfig", "LayerSpec", "MoESpec", "RunConfig", "ShapeConfig",
+           "SHAPES", "ARCHS", "get_arch", "shape_applicable"]

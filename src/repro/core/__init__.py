@@ -1,0 +1,75 @@
+"""The paper's contribution: LUT-based softmax approximation (REXP + 2D LUT).
+
+Public surface:
+  - precision:    Precision registry (int16/uint8/uint4/uint2, Tables 5/8)
+  - lut_builder:  LUT construction (Eq. 4, 7, 8) + size accounting
+  - lut_softmax:  Algorithms 1 & 2 + exact softmax + prior-art baselines
+  - policies:     SoftmaxPolicy — the switch threaded through the framework
+  - quantization: PTQ-D (dynamic int8) emulation of the paper's protocol
+  - calibration:  Σe^x distribution analysis / LUT sizing (Fig. 4, §5.3)
+"""
+
+from repro.core.precision import PRECISIONS, Precision, get_precision
+from repro.core.lut_builder import (
+    Lut2DTables,
+    RexpTables,
+    build_lut2d_tables,
+    build_lut_alpha,
+    build_lut_exp,
+    build_lut_recip_exp,
+    build_lut_sigma,
+    build_rexp_tables,
+)
+from repro.core.lut_softmax import (
+    logsoftmax_scoring,
+    lut_lookup,
+    make_softmax_fn,
+    softmax_exact,
+    softmax_log_prior,
+    softmax_lut2d,
+    softmax_rexp,
+    softmax_rexp_unnorm,
+)
+from repro.core.policies import EXACT, SoftmaxPolicy
+from repro.core.quantization import (
+    fake_quant_affine,
+    fake_quant_symmetric,
+    quantize_params_ptqd,
+)
+from repro.core.calibration import (
+    CalibrationResult,
+    SumCollector,
+    calibrate_from_logits,
+    row_exp_sums,
+)
+
+__all__ = [
+    "PRECISIONS",
+    "Precision",
+    "get_precision",
+    "Lut2DTables",
+    "RexpTables",
+    "build_lut2d_tables",
+    "build_lut_alpha",
+    "build_lut_exp",
+    "build_lut_recip_exp",
+    "build_lut_sigma",
+    "build_rexp_tables",
+    "logsoftmax_scoring",
+    "lut_lookup",
+    "make_softmax_fn",
+    "softmax_exact",
+    "softmax_log_prior",
+    "softmax_lut2d",
+    "softmax_rexp",
+    "softmax_rexp_unnorm",
+    "EXACT",
+    "SoftmaxPolicy",
+    "fake_quant_affine",
+    "fake_quant_symmetric",
+    "quantize_params_ptqd",
+    "CalibrationResult",
+    "SumCollector",
+    "calibrate_from_logits",
+    "row_exp_sums",
+]

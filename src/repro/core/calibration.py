@@ -1,0 +1,116 @@
+"""Σe^x calibration — paper §5.3 / Fig. 4 and the LUT-sizing rule.
+
+The sole data-dependent quantity in both methods is the *denominator
+range*: ``max(Σe^x)`` decides ``x_s`` (REXP's LUT_α length) and the σ-table
+column count (2D-LUT).  The paper observes Σe^x ≤ 60 for NLP attention and
+a right-tailed distribution for DETR+DC5 (which is why those models need
+a 256→512-entry LUT_α).  This module reproduces that analysis for any
+model in the zoo: run sample batches, collect per-row Σe^x at every
+softmax site, histogram them, and recommend table sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def row_exp_sums(logits: Array, axis: int = -1) -> Array:
+    """Σ_j e^{x_j − max(x)} per softmax row (the Fig. 4 statistic)."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.where(jnp.isfinite(x), jnp.exp(x - m), 0.0)
+    return jnp.sum(e, axis=axis)
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    """Aggregated Σe^x statistics across softmax sites."""
+
+    count: int
+    mean: float
+    p50: float
+    p99: float
+    p999: float
+    max: float
+    hist_counts: np.ndarray  # histogram, paper Fig. 4 (bins=50, range=(0,500))
+    hist_edges: np.ndarray
+
+    def recommend_alpha_len(self, headroom: float = 1.25) -> int:
+        """REXP ``x_s`` + 1: cover p99.9 with headroom (paper §5.3 logic —
+        DETR+DC5's right tail is exactly what a too-small LUT_α clips)."""
+        return int(np.ceil(self.p999 * headroom)) + 1
+
+    def recommend_sigma_cols(self, headroom: float = 1.25) -> int:
+        """2D-LUT column count (scale_Σ = 1.0 ⇒ cols ≈ max Σe^x)."""
+        return max(2, int(np.ceil(self.p999 * headroom)))
+
+
+class SumCollector:
+    """Accumulates Σe^x samples streamed out of instrumented models.
+
+    The model zoo's attention layers call ``collector.offer(logits)`` when
+    a collector is threaded through (serving path only; no-op otherwise).
+    """
+
+    def __init__(self, max_samples: int = 2_000_000):
+        self._chunks: list[np.ndarray] = []
+        self._n = 0
+        self._max = max_samples
+
+    def offer(self, logits: Array, axis: int = -1) -> None:
+        if self._n >= self._max:
+            return
+        s = np.asarray(jax.device_get(row_exp_sums(logits, axis))).reshape(-1)
+        take = min(s.size, self._max - self._n)
+        self._chunks.append(s[:take])
+        self._n += take
+
+    def result(self, hist_bins: int = 50,
+               hist_range: tuple[float, float] = (0.0, 500.0)) -> CalibrationResult:
+        if not self._chunks:
+            raise ValueError("no Σe^x samples collected")
+        s = np.concatenate(self._chunks)
+        counts, edges = np.histogram(s, bins=hist_bins, range=hist_range)
+        return CalibrationResult(
+            count=int(s.size),
+            mean=float(s.mean()),
+            p50=float(np.percentile(s, 50)),
+            p99=float(np.percentile(s, 99)),
+            p999=float(np.percentile(s, 99.9)),
+            max=float(s.max()),
+            hist_counts=counts,
+            hist_edges=edges,
+        )
+
+
+def calibrate_from_logits(batches: Iterable[Array], axis: int = -1,
+                          **hist_kw) -> CalibrationResult:
+    """One-shot calibration over an iterable of logit tensors."""
+    c = SumCollector()
+    for b in batches:
+        c.offer(b, axis)
+    return c.result(**hist_kw)
+
+
+def calibrate_model(
+    apply_fn: Callable[..., Array],
+    batches: Iterable,
+    collector: SumCollector | None = None,
+) -> CalibrationResult:
+    """Run ``apply_fn(batch, collector=...)`` over batches and aggregate.
+
+    ``apply_fn`` is expected to route attention logits into the collector
+    (models built with ``collect_stats=True`` do this automatically).
+    """
+    collector = collector or SumCollector()
+    for b in batches:
+        apply_fn(b, collector=collector)
+    return collector.result()

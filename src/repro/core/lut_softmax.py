@@ -1,0 +1,311 @@
+"""LUT-based softmax approximation — paper Algorithms 1 and 2, vectorized.
+
+These are the *reference semantics* for the whole framework: the Pallas
+kernels in ``repro.kernels`` must agree bit-exactly on the integer
+pipeline (same bin indices, same integer products) — the kernels only
+change *where* the arithmetic runs (VMEM-blocked, MXU one-hot lookups),
+never *what* it computes.
+
+Integer semantics
+-----------------
+Inputs are float logits (the models run bf16/f32); the previous-layer
+quantization the paper assumes is folded into the bin-index computation.
+All table values are int32 carrying ``w``-bit payloads (``qmax = 2^w−1``).
+
+* REXP (Algorithm 1)::
+
+      d_i     = max(x) − x_i                      (≥ 0)
+      e_i     = LUT_1/e[ bin(d_i) ]               (int, ≤ qmax)
+      S       = Σ_j e_j                           (int accumulate)
+      α       = LUT_α[ clamp(bin(S / qmax)) ]     (int, ≤ qmax)
+      σ_int_i = round(e_i · α / qmax)             (HW: product >> w)
+      σ_i     = σ_int_i / qmax
+
+* 2D-LUT (Algorithm 2)::
+
+      e_i     = LUT_exp[ bin(d_i / step) ]
+      S       = Σ_j e_j
+      i-idx   = clamp(bin(e_i / (qmax·scale_ex)))      (numerator MSBs)
+      j-idx   = clamp(bin(S / (qmax·scale_Σ)), 1, C)   (denominator MSBs)
+      σ_i     = LUT_σ[i-idx][j-idx − 1] / qmax
+
+``bin`` is round-to-nearest (``index_mode="round"``, default — centered
+piecewise-constant bins) or truncation (``"floor"`` — the literal MSB
+wiring).  Sums are accumulated in f32, which is exact for every value
+below 2^24; the α/σ column index saturates at ≈ x_s·qmax ≤ 2·10^6 ≪ 2^24,
+so f32 accumulation is indistinguishable from a wide HW accumulator
+(tests assert this).
+
+Masking: ``−inf`` logits (attention masks) index the terminal LUT entry
+(value 0) and contribute nothing; fully-masked rows produce all-zero
+rows (flash-attention convention) rather than NaN.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_builder import Lut2DTables, RexpTables
+from repro.core.policies import SoftmaxPolicy
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _bin_index(v: Array, index_mode: str) -> Array:
+    """Piecewise-constant bin index of a non-negative float value."""
+    if index_mode == "round":
+        return jnp.round(v).astype(jnp.int32)
+    if index_mode == "floor":
+        return jnp.floor(v).astype(jnp.int32)
+    raise ValueError(f"unknown index_mode {index_mode!r}")
+
+
+def inv_scale(denom: float) -> jnp.float32:
+    """Precomputed f32 reciprocal.
+
+    Divisions by table constants are expressed as multiplies by this
+    value in BOTH the core semantics and the Pallas kernels, so jitted
+    and eager paths stay bit-identical (XLA rewrites x/c into x·(1/c);
+    doing it explicitly pins the exact f32 constant everywhere).
+    """
+    return jnp.float32(1.0 / denom)
+
+
+def lut_lookup(lut: Array, idx: Array, impl: str = "gather") -> Array:
+    """Read ``lut[idx]`` elementwise.
+
+    ``gather``: dynamic gather (``jnp.take``).
+    ``onehot``: one-hot(idx) @ lut — numerically identical, but lowers to
+    an MXU matmul on TPU (DESIGN.md §2).  For a table of L entries this
+    costs L MACs per element, which for L ≤ 256 is negligible next to the
+    attention matmuls it sits between.
+    """
+    if impl == "gather":
+        return jnp.take(lut, idx, axis=0)
+    if impl == "onehot":
+        oh = jax.nn.one_hot(idx, lut.shape[0], dtype=jnp.float32)
+        out = oh @ lut.astype(jnp.float32)
+        return out.astype(lut.dtype)
+    raise ValueError(f"unknown lookup impl {impl!r}")
+
+
+def _masked_max(x: Array, axis: int) -> Array:
+    """Row max that is safe for fully-masked (-inf) rows."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    return jnp.where(jnp.isfinite(m), m, 0.0)
+
+
+def softmax_exact(x: Array, axis: int = -1) -> Array:
+    """Eq. (2): numerically-stable exact softmax (training path)."""
+    x = x.astype(jnp.float32)
+    m = _masked_max(x, axis)
+    e = jnp.exp(x - m)
+    e = jnp.where(jnp.isfinite(x), e, 0.0)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return e / jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+
+
+# ---------------------------------------------------------------------------
+# Method A — REXP (paper §4.1, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def rexp_exp_int(x: Array, tables: RexpTables, axis: int = -1,
+                 index_mode: str = "round", lookup_impl: str = "gather") -> Array:
+    """Integer numerator ``e_int = LUT_1/e[bin(max(x) − x)]`` (int32)."""
+    x = x.astype(jnp.float32)
+    lut = jnp.asarray(tables.lut_recip_exp, dtype=jnp.int32)
+    n = lut.shape[0]
+    finite = jnp.isfinite(x)
+    d = _masked_max(x, axis) - x  # ≥ 0 where finite
+    idx = jnp.clip(_bin_index(jnp.where(finite, d, float(n - 1)), index_mode),
+                   0, n - 1)
+    # Masked (-inf) logits contribute exactly 0 — NOT the terminal LUT entry,
+    # which is non-zero for some published table lengths (e.g. the uint4 /
+    # int16 LUT_exp tails round to 1).  Mask handling is outside the paper's
+    # scope; serving engines require hard zeros.
+    return jnp.where(finite, lut_lookup(lut, idx, lookup_impl), 0)
+
+
+def rexp_alpha_index(s_int: Array, tables: RexpTables,
+                     index_mode: str = "round") -> Array:
+    """α-table index: ``clamp(bin(S / qmax), 0, x_s)`` (Algorithm 1 line 9)."""
+    qmax = tables.precision.qmax
+    n_alpha = tables.lut_alpha.shape[0]
+    j = _bin_index(s_int.astype(jnp.float32) * inv_scale(qmax), index_mode)
+    return jnp.clip(j, 0, n_alpha - 1)
+
+
+def softmax_rexp(
+    x: Array,
+    tables: RexpTables,
+    axis: int = -1,
+    index_mode: str = "round",
+    lookup_impl: str = "gather",
+) -> Array:
+    """Algorithm 1 (REXP), vectorized over ``axis``.  Returns f32 in [0, 1]."""
+    qmax = tables.precision.qmax
+    lut_alpha = jnp.asarray(tables.lut_alpha, dtype=jnp.int32)
+
+    e_int = rexp_exp_int(x, tables, axis, index_mode, lookup_impl)
+    # f32 accumulate — exact below 2^24; saturation region starts far lower.
+    s = jnp.sum(e_int.astype(jnp.float32), axis=axis, keepdims=True)
+    idx_a = rexp_alpha_index(s, tables, index_mode)
+    alpha_int = lut_lookup(lut_alpha, idx_a, lookup_impl)
+
+    # HW: (e · α) >> w.  We model the re-quantization as round(prod / qmax)
+    # which keeps the output a w-bit integer; the ulp-level difference vs a
+    # literal shift is below the method's bin error (tests compare both).
+    prod = e_int * alpha_int  # int32; ≤ qmax² < 2^30
+    inv = inv_scale(qmax)
+    sigma_int = jnp.round(prod.astype(jnp.float32) * inv)
+    return sigma_int * inv
+
+
+# ---------------------------------------------------------------------------
+# Method B — 2D LUT (paper §4.2, Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def lut2d_exp_int(x: Array, tables: Lut2DTables, axis: int = -1,
+                  index_mode: str = "round", lookup_impl: str = "gather") -> Array:
+    """Integer numerator via the 1-D exp table (Algorithm 2 lines 4-7)."""
+    x = x.astype(jnp.float32)
+    lut = jnp.asarray(tables.lut_exp, dtype=jnp.int32)
+    n = lut.shape[0]
+    finite = jnp.isfinite(x)
+    d = _masked_max(x, axis) - x
+    scaled = jnp.where(finite, d * inv_scale(tables.exp_step), float(n - 1))
+    idx = jnp.clip(_bin_index(scaled, index_mode), 0, n - 1)
+    # Hard zero for masked logits (see rexp_exp_int) — the published uint4 /
+    # int16 LUT_exp tails are non-zero.
+    return jnp.where(finite, lut_lookup(lut, idx, lookup_impl), 0)
+
+
+def softmax_lut2d(
+    x: Array,
+    tables: Lut2DTables,
+    axis: int = -1,
+    index_mode: str = "round",
+    lookup_impl: str = "gather",
+) -> Array:
+    """Algorithm 2 (2D LUT), vectorized over ``axis``.  Returns f32 in [0, 1].
+
+    No divider *and no multiplier*: the final value is a single 2-D table
+    read addressed by the MSBs of numerator and denominator.
+    """
+    qmax = tables.precision.qmax
+    lut_sigma = jnp.asarray(tables.lut_sigma, dtype=jnp.int32)
+    n_rows, n_cols = lut_sigma.shape
+
+    e_int = lut2d_exp_int(x, tables, axis, index_mode, lookup_impl)
+    s = jnp.sum(e_int.astype(jnp.float32), axis=axis, keepdims=True)
+
+    # Row (numerator) index: MSBs of e w.r.t. scale_ex. floor-style per the
+    # MSB wiring; "round" mode centers the bin.
+    i_idx = jnp.clip(
+        _bin_index(e_int.astype(jnp.float32)
+                   * inv_scale(qmax * tables.scale_ex), index_mode),
+        0, n_rows - 1,
+    )
+    # Column (denominator) index: j = bin(S_real / scale_Σ) ∈ [1, n_cols],
+    # stored shifted (col 0 ↔ j = 1).  Max-normalization ⇒ S_real ≥ ~1.
+    j = _bin_index(s * inv_scale(qmax * tables.scale_sum), index_mode)
+    j_idx = jnp.clip(j, 1, n_cols) - 1
+
+    flat = lut_sigma.reshape(-1)
+    lin = i_idx * n_cols + jnp.broadcast_to(j_idx, i_idx.shape)
+    sigma_int = lut_lookup(flat, lin, "gather")
+    return sigma_int.astype(jnp.float32) * inv_scale(qmax)
+
+
+# ---------------------------------------------------------------------------
+# Prior-art baselines (paper Appendix A.1)
+# ---------------------------------------------------------------------------
+
+
+def softmax_rexp_unnorm(x: Array, tables: RexpTables, axis: int = -1,
+                        index_mode: str = "round") -> Array:
+    """[29] (aggressive): σ* = 1/e^{max−x} with NO PDF normalization.
+
+    The paper shows this collapses DETR to 0 AP (Appendix A.1.1, Fig. 5);
+    we keep it as the ablation baseline REXP improves upon.
+    """
+    qmax = tables.precision.qmax
+    e_int = rexp_exp_int(x, tables, axis, index_mode)
+    return e_int.astype(jnp.float32) / qmax
+
+
+def softmax_log_prior(x: Array, w: int, axis: int = -1,
+                      max_norm: bool = False) -> Array:
+    """[32] Eq. (2) — paper Eq. (11) (and Eq. (12) with ``max_norm``).
+
+    exp(x − ln Σe^x) with the outer exp rounded to ``2^w − 1`` levels,
+    mimicking w-bit HW output (paper A.1.2: only the outer non-linearity
+    is quantized, so real HW would be *worse*).
+    """
+    x = x.astype(jnp.float32)
+    prec = float((1 << w) - 1)
+    if max_norm:
+        x = x - _masked_max(x, axis)
+    e = jnp.where(jnp.isfinite(x), jnp.exp(x), 0.0)
+    lse = jnp.log(jnp.maximum(jnp.sum(e, axis=axis, keepdims=True),
+                              jnp.finfo(jnp.float32).tiny))
+    sigma = jnp.exp(jnp.where(jnp.isfinite(x), x, -jnp.inf) - lse)
+    return jnp.round(sigma * prec) / prec
+
+
+def logsoftmax_scoring(x: Array, axis: int = -1) -> Array:
+    """[35]/[13] extreme: log-domain scores, exp skipped entirely.
+
+    Only argmax-preserving — usable when softmax is terminal "scoring",
+    exactly the regime the paper argues breaks inside attention graphs.
+    """
+    x = x.astype(jnp.float32)
+    m = _masked_max(x, axis)
+    e = jnp.where(jnp.isfinite(x), jnp.exp(x - m), 0.0)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return (x - m) - jnp.log(jnp.maximum(s, jnp.finfo(jnp.float32).tiny))
+
+
+# ---------------------------------------------------------------------------
+# Policy dispatch
+# ---------------------------------------------------------------------------
+
+
+def make_softmax_fn(policy: SoftmaxPolicy, rexp_tables: RexpTables | None = None,
+                    lut2d_tables: Lut2DTables | None = None):
+    """Bind a policy to a plain ``f(x, axis=-1) -> softmax-like`` callable.
+
+    Tables default to the paper's Table-8 configuration for the policy's
+    precision; pass calibrated tables to override (see core.calibration).
+    """
+    from repro.core import lut_builder  # local import to avoid cycles
+
+    if policy.impl == "exact":
+        return softmax_exact
+    if policy.impl in ("rexp", "rexp_unnorm"):
+        t = rexp_tables or lut_builder.build_rexp_tables(
+            policy.precision, policy.alpha_len)
+        if policy.impl == "rexp":
+            return partial(softmax_rexp, tables=t, index_mode=policy.index_mode,
+                           lookup_impl=policy.lookup_impl)
+        return partial(softmax_rexp_unnorm, tables=t,
+                       index_mode=policy.index_mode)
+    if policy.impl == "lut2d":
+        t = lut2d_tables or lut_builder.build_lut2d_tables(policy.precision)
+        return partial(softmax_lut2d, tables=t, index_mode=policy.index_mode,
+                       lookup_impl=policy.lookup_impl)
+    if policy.impl == "log2_prior":
+        from repro.core.precision import get_precision
+        w = get_precision(policy.precision).w
+        return partial(softmax_log_prior, w=w, max_norm=policy.max_norm)
+    raise ValueError(f"unknown softmax impl {policy.impl!r}")

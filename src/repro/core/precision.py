@@ -1,0 +1,59 @@
+"""Precision registry for LUT-based softmax approximation.
+
+The paper (Table 5 / Table 8) evaluates four precisions.  ``w`` is the
+number of *value* bits per LUT entry; the quantization ceiling is
+``qmax = 2**w - 1`` (the paper's ``prec`` constant; note the paper's A.2
+text mentions ``scale = 32768`` for int16 — we use the consistent
+``2**w - 1`` everywhere and record the discrepancy in DESIGN.md).
+
+All integer LUT arithmetic is carried in int32: the widest product is
+``(2**15 - 1)**2 < 2**30``, safely inside int32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """A LUT quantization precision (paper Tables 5 and 8)."""
+
+    name: str
+    w: int  # value bits per entry ("BITS PER ENTRY" column)
+
+    @property
+    def qmax(self) -> int:
+        """Quantization ceiling ``2**w - 1`` (paper's ``prec``)."""
+        return (1 << self.w) - 1
+
+    @property
+    def x_q(self) -> int:
+        """Efficient quantization boundary ``ceil(ln(2**w - 1))`` (Eq. 4)."""
+        return math.ceil(math.log(self.qmax))
+
+    @property
+    def lut_recip_exp_len(self) -> int:
+        """Length of ``LUT_1/e``: indices ``0 .. x_q + 1`` inclusive (Eq. 4)."""
+        return self.x_q + 2
+
+
+# Paper Table 5 / Table 8, "BITS PER ENTRY" column.
+INT16 = Precision("int16", 15)
+UINT8 = Precision("uint8", 8)
+UINT4 = Precision("uint4", 4)
+UINT2 = Precision("uint2", 2)
+
+PRECISIONS: dict[str, Precision] = {p.name: p for p in (INT16, UINT8, UINT4, UINT2)}
+
+
+def get_precision(name: str | Precision) -> Precision:
+    if isinstance(name, Precision):
+        return name
+    try:
+        return PRECISIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {name!r}; expected one of {sorted(PRECISIONS)}"
+        ) from None

@@ -1,0 +1,93 @@
+"""PTQ-D emulation — dynamic post-training quantization (paper §5, A.3).
+
+The paper's experimental protocol quantizes every *linear layer* of a
+pre-trained model with PyTorch dynamic quantization (qint8 weights,
+per-tensor affine; activations quantized dynamically at run time), then
+swaps the softmax for the LUT approximation.  We reproduce the protocol
+as fake-quantization in JAX so the "PTQ-D" row of our experiment tables
+measures exactly what the paper's does: the quantization noise floor the
+LUT softmax adds to.
+
+Fake-quant keeps tensors in float but snaps values onto the int8 grid —
+numerics match dequantize(quantize(x)) of a real int8 engine.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+INT8_QMAX = 127.0
+
+
+def fake_quant_symmetric(x: Array, qmax: float = INT8_QMAX) -> Array:
+    """Per-tensor symmetric fake quantization (weight scheme).
+
+    scale = max|x| / qmax;  q = clip(round(x / scale), −qmax, qmax).
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / qmax, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def fake_quant_affine(x: Array, qmax: float = 255.0) -> Array:
+    """Per-tensor affine fake quantization (dynamic activation scheme)."""
+    x = x.astype(jnp.float32)
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    scale = jnp.maximum((hi - lo) / qmax, jnp.finfo(jnp.float32).tiny)
+    zp = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(x / scale) + zp, 0.0, qmax)
+    return (q - zp) * scale
+
+
+def _is_linear_weight(path: tuple, leaf: Array) -> bool:
+    """Matmul weights = float leaves with ndim ≥ 2 that are not embeddings.
+
+    Embedding tables are excluded to mirror torch dynamic quantization,
+    which targets nn.Linear only (paper A.3).
+    """
+    if not isinstance(leaf, (jnp.ndarray, jax.Array)):
+        return False
+    if leaf.ndim < 2 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    keys = "/".join(str(getattr(k, "key", k)) for k in path).lower()
+    return not ("embed" in keys or "pos_" in keys)
+
+
+def quantize_params_ptqd(params: PyTree) -> PyTree:
+    """Apply PTQ-D weight quantization to a parameter pytree.
+
+    Every linear-layer weight is snapped onto the symmetric int8 grid;
+    biases, norms scales and embeddings stay float (torch default).
+    """
+
+    def q(path, leaf):
+        if _is_linear_weight(path, leaf):
+            return fake_quant_symmetric(leaf).astype(leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(q, params)
+
+
+def quantization_error_report(params: PyTree, qparams: PyTree) -> dict:
+    """Aggregate weight-quantization error stats (for Table-4 analogue)."""
+    errs = []
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(qparams)):
+        if a.ndim >= 2 and jnp.issubdtype(a.dtype, jnp.floating):
+            d = jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+            denom = jnp.maximum(jnp.max(jnp.abs(a)), 1e-9)
+            errs.append(float(jnp.max(d) / denom))
+    return {
+        "n_quantized_tensors": len(errs),
+        "max_rel_err": max(errs) if errs else 0.0,
+        "mean_rel_err": sum(errs) / len(errs) if errs else 0.0,
+    }

@@ -1,0 +1,2 @@
+"""Data substrate: deterministic, resumable synthetic pipelines."""
+from repro.data.synthetic import DataConfig, SyntheticDataset

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (softmax inside
+attention) plus the exact-softmax baseline:
+
+  lut_softmax/     row-wise LUT softmax (REXP + 2D-LUT)
+  lut_attention/   fused flash-style attention with LUT softmax
+  flash_attention/ exact online-softmax flash attention
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (the
+jit'd public wrapper with XLA fallback paths) and ref.py (pure-jnp
+oracle).  Kernels are validated in interpret mode on CPU; the multi-pod
+dry-run lowers the XLA paths (Mosaic needs a real TPU backend).
+"""

@@ -1,0 +1,83 @@
+"""Shared Pallas kernel utilities: VMEM budgeting, padding, in-kernel LUT reads.
+
+TPU-native LUT lookup
+---------------------
+The paper's tables are tiny (≤ 1.5 KB) but TPUs have no cheap per-lane
+arbitrary gather.  Three lowerings, chosen per table size:
+
+* ``select`` — unrolled select-chain ``Σ_l (idx == l) · lut[l]``: L fused
+  VPU select-madds per element.  For the REXP tables (L ≤ 13) and the
+  α/σ tables this is essentially free and needs no gather support at all
+  (this is the piecewise-constant LUT re-expressed as predication — the
+  TPU-native analogue of the paper's MSB wiring).
+* ``gather`` — ``jnp.take``; exercised in interpret mode and on backends
+  with dynamic-gather support.
+* one-hot × LUT on the MXU is numerically identical to ``select`` and is
+  what ``select`` amortizes into when XLA vectorizes the chain; see
+  DESIGN.md §2 for the napkin math.
+
+All three produce bit-identical int32 results (property-tested).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: conservative per-core VMEM working-set budget (bytes) used to pick block
+#: shapes; TPU v5e has ~128 MiB VMEM but we budget well under it so double
+#: buffering and spills have room.
+VMEM_BUDGET = 48 * 1024 * 1024
+
+MXU_ALIGN = 128  # MXU systolic dims; block shapes are multiples of this
+SUBLANE = 8
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def pad_axis_to(x: Array, axis: int, size: int, value: float) -> Array:
+    """Pad ``axis`` of ``x`` up to ``size`` with ``value``."""
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, size - cur)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def select_lookup(lut: Array, idx: Array) -> Array:
+    """Unrolled select-chain LUT read (TPU-native; no gather primitive).
+
+    ``lut`` is a small 1-D int32 table (compile-time length); ``idx`` is an
+    int32 array of clamped indices.  Emits ``len(lut)`` vector selects.
+    """
+    n = lut.shape[0]
+    acc = jnp.zeros(idx.shape, dtype=jnp.int32)
+    for l in range(n):
+        acc = jnp.where(idx == l, lut[l], acc)
+    return acc
+
+
+def kernel_lookup(lut: Array, idx: Array, impl: str) -> Array:
+    """In-kernel LUT read dispatch ('select' | 'gather')."""
+    if impl == "select":
+        return select_lookup(lut, idx)
+    if impl == "gather":
+        return jnp.take(lut, idx, axis=0)
+    raise ValueError(f"unknown in-kernel lookup impl {impl!r}")
+
+
+def pick_block_rows(n_cols: int, target_bytes: int = 4 * 1024 * 1024,
+                    max_rows: int = 1024) -> int:
+    """Row-block size so a (rows, n_cols) f32 tile fits ``target_bytes``."""
+    rows = max(SUBLANE, target_bytes // max(n_cols * 4, 1))
+    rows = min(int(rows), max_rows)
+    return max(SUBLANE, rows // SUBLANE * SUBLANE)

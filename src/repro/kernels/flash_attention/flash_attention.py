@@ -1,0 +1,115 @@
+"""Exact-softmax flash attention Pallas kernel (training/serving baseline).
+
+Single pass over K blocks with the classic online-softmax recurrence
+(running max m, running sum l, rescaled accumulator).  This is the exact
+counterpart the LUT kernels are benchmarked against: same blocking, same
+VMEM footprint, but VPU transcendentals + reciprocal instead of table
+reads.
+
+Returns (out, m, l) — the log-sum-exp pieces are emitted for reuse by a
+custom-vjp backward (see ops.py) and for numerical cross-checks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import pad_axis_to, round_up
+
+Array = jax.Array
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, lq, lk_valid, bq, bk):
+    kb = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qb = pl.program_id(2)
+    ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = ki < lk_valid
+    if causal:
+        qi = (qb * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+              + (lk_valid - lq))
+        mask = mask & (ki <= qi)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe[:, None]), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+
+    l_ref[0, 0] = l_ref[0, 0] * corr + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[0, 0] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        l = l_ref[0, 0]
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+
+
+def flash_attention_pallas(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = False,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> tuple[Array, Array, Array]:
+    """Exact flash attention.  q (B,H,Lq,D); k,v (B,KVH,Lk,D) → (out, m, l)."""
+    b, h, lq, d = q.shape
+    _, kvh, lk, _ = k.shape
+    assert h % kvh == 0
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+
+    bq = min(block_q, round_up(lq, 8))
+    bk = min(block_k, round_up(lk, 128))
+    lq_p, lk_p = round_up(lq, bq), round_up(lk, bk)
+    qp = pad_axis_to(q, 2, lq_p, 0.0)
+    kp = pad_axis_to(k, 2, lk_p, 0.0)
+    vp = pad_axis_to(v, 2, lk_p, 0.0)
+
+    grid = (b, h, lq_p // bq, lk_p // bk)
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+    k_spec = pl.BlockSpec((1, 1, bk, d),
+                          lambda bi, hi, qi, ki: (bi, hi // g, ki, 0))
+    m_spec = pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi))
+    o_spec = pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out, m, l = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal, lq=lq,
+                          lk_valid=lk, bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[q_spec, k_spec, k_spec],
+        out_specs=(o_spec, m_spec, m_spec),
+        out_shape=(jax.ShapeDtypeStruct((b, h, lq_p, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h, lq_p), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h, lq_p), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :lq], m[:, :, :lq], l[:, :, :lq]

@@ -1,0 +1,30 @@
+"""Public exact-attention API (training baseline).
+
+``flash_attention`` dispatches between the Pallas kernel (interpret mode
+off-TPU) and the blocked/naive XLA paths shared with the LUT attention
+ops (policy = exact).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.policies import EXACT
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.lut_attention.ops import lut_attention
+
+Array = jax.Array
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = False,
+                    scale: float | None = None, backend: str = "naive",
+                    kv_len=None, interpret: bool = True,
+                    q_chunk: int = 512, k_chunk: int = 1024) -> Array:
+    if backend == "pallas":
+        assert kv_len is None
+        out, _, _ = flash_attention_pallas(q, k, v, causal=causal,
+                                           scale=scale, interpret=interpret)
+        return out
+    return lut_attention(q, k, v, EXACT, causal=causal, scale=scale,
+                         kv_len=kv_len, backend=backend,
+                         q_chunk=q_chunk, k_chunk=k_chunk)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the exact flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *,
+                        causal: bool = False,
+                        scale: float | None = None) -> Array:
+    """Naive exact attention with GQA head mapping and right-aligned causal."""
+    b, h, lq, d = q.shape
+    kvh, lk = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    kx = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * scale
+    if causal:
+        qi = jnp.arange(lq)[:, None] + (lk - lq)
+        ki = jnp.arange(lk)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx) / jnp.maximum(l, 1e-30)

@@ -1,0 +1,1 @@
+"""Pallas kernel package — see sibling modules (kernel / ops / ref)."""

@@ -1,0 +1,291 @@
+"""Public attention-with-LUT-softmax API.
+
+Three execution paths, one semantics:
+
+* ``pallas``  — the fused VMEM-blocked kernels (interpret mode off-TPU).
+* ``blocked`` — pure-XLA flash-style scan over K chunks (and lax.map over
+  Q chunks).  O(chunk) memory; this is the production serving path the
+  multi-pod dry-run lowers, and it supports a *traced* ``kv_len`` for
+  decode against a pre-allocated KV cache.
+* ``naive``   — materialized logits (the oracle).  Used by small models,
+  tests, and the roofline probes (XLA's cost_analysis counts loop bodies
+  once, so probes must avoid scans — see EXPERIMENTS.md §Methodology).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut_builder
+from repro.core.lut_softmax import inv_scale
+from repro.core.policies import SoftmaxPolicy
+from repro.core import lut_softmax as _core
+from repro.kernels.lut_attention import ref as _ref
+from repro.kernels.lut_attention.lut_attention import lut_attention_pallas
+
+Array = jax.Array
+
+
+def _tables_for(policy: SoftmaxPolicy):
+    if policy.impl == "rexp":
+        return lut_builder.build_rexp_tables(policy.precision,
+                                             policy.alpha_len)
+    if policy.impl == "lut2d":
+        return lut_builder.build_lut2d_tables(policy.precision)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Blocked XLA path (flash-style scans; supports traced kv_len)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_mask(q0: Array | int, k0: Array | int, bq: int, bk: int,
+                causal: bool, lq: int, lk_eff: Array | int):
+    """(bq, bk) visibility mask for a (q-chunk, k-chunk) tile."""
+    ki = k0 + jnp.arange(bk)[None, :]
+    mask = ki < lk_eff
+    if causal:
+        qi = q0 + jnp.arange(bq)[:, None] + (lk_eff - lq)
+        mask = mask & (ki <= qi)
+    return mask
+
+
+def _grouped_logits(qc: Array, kc: Array, scale: float) -> Array:
+    """q (B,KVH,G,bq,D) × k (B,KVH,bk,D) → (B,KVH,G,bq,bk) f32."""
+    return jnp.einsum("bngqd,bnkd->bngqk", qc.astype(jnp.float32),
+                      kc.astype(jnp.float32)) * scale
+
+
+def lut_attention_blocked(
+    q: Array, k: Array, v: Array, policy: SoftmaxPolicy, *,
+    causal: bool = False,
+    scale: float | None = None,
+    kv_len: Array | int | None = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    unroll: bool = False,
+) -> Array:
+    """Flash-style LUT attention in pure XLA (fused-requant semantics).
+
+    ``unroll=True`` unrolls the chunk loops (roofline probes: XLA's
+    cost_analysis counts a while body once, so the probe program must be
+    loop-free to account every tile — EXPERIMENTS.md §Methodology).
+
+    q (B,H,Lq,D); k,v (B,KVH,Lk,D).  ``kv_len`` (traced ok) masks the tail
+    of a pre-allocated KV cache.  Never materializes more than a
+    (q_chunk × k_chunk) logits tile per (batch, head).
+    """
+    b, h, lq, d = q.shape
+    kvh, lk = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    lk_eff = lk if kv_len is None else kv_len
+    tables = _tables_for(policy)
+    exact = policy.impl == "exact"
+
+    bq = min(q_chunk, lq)
+    bk = min(k_chunk, lk)
+    # pad to chunk multiples; padded KV is masked via lk_eff, padded Q
+    # rows compute junk that is sliced off at the end.
+    lq_orig = lq
+    lq_p = -(-lq // bq) * bq
+    lk_p = -(-lk // bk) * bk
+    if lq_p != lq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, lq_p - lq), (0, 0)))
+    if lk_p != lk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, lk_p - lk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, lk_p - lk), (0, 0)))
+        if kv_len is None:
+            lk_eff = lk  # mask the structural padding
+    lq, lk = lq_p, lk_p
+    nq, nk = lq // bq, lk // bk
+
+    qg = q.reshape(b, kvh, g, lq, d)
+    # chunk axis leading for lax.scan
+    kr = jnp.moveaxis(k.reshape(b, kvh, nk, bk, d), 2, 0)
+    vr = jnp.moveaxis(v.reshape(b, kvh, nk, bk, d), 2, 0)
+
+    if exact:
+        def one_q_chunk(qi):
+            qc = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+
+            def step(carry, xs):
+                m, l, acc = carry
+                kc, vc, ki = xs
+                s = _grouped_logits(qc, kc, scale)
+                mask = _chunk_mask(qi * bq, ki * bk, bq, bk, causal,
+                                   lq_orig, lk_eff)
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]),
+                              0.0)
+                corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+                l = l * corr + jnp.sum(p, axis=-1)
+                acc = (acc * corr[..., None]
+                       + jnp.einsum("bngqk,bnkd->bngqd", p,
+                                    vc.astype(jnp.float32)))
+                return (m_new, l, acc), None
+
+            m0 = jnp.full((b, kvh, g, bq), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((b, kvh, g, bq), jnp.float32)
+            a0 = jnp.zeros((b, kvh, g, bq, d), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                step, (m0, l0, a0), (kr, vr, jnp.arange(nk)),
+                unroll=nk if unroll else 1)
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+    else:
+        qmax = tables.precision.qmax
+        if policy.impl == "rexp":
+            lut_main = jnp.asarray(tables.lut_recip_exp, jnp.int32)
+            e_step = 1.0
+        else:
+            lut_main = jnp.asarray(tables.lut_exp, jnp.int32)
+            e_step = tables.exp_step
+        n_lut = lut_main.shape[0]
+        rnd = jnp.round if policy.index_mode == "round" else jnp.floor
+
+        def e_int_of(s, m_safe):
+            finite = jnp.isfinite(s)
+            dd = jnp.where(finite, (m_safe[..., None] - s) * inv_scale(e_step),
+                           float(n_lut - 1))
+            idx = jnp.clip(rnd(dd).astype(jnp.int32), 0, n_lut - 1)
+            return jnp.where(finite, jnp.take(lut_main, idx, axis=0), 0)
+
+        def one_q_chunk(qi):
+            qc = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+
+            def maxstep(m, xs):
+                kc, ki = xs
+                s = _grouped_logits(qc, kc, scale)
+                mask = _chunk_mask(qi * bq, ki * bk, bq, bk, causal,
+                                   lq_orig, lk_eff)
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                return jnp.maximum(m, jnp.max(s, axis=-1)), None
+
+            m0 = jnp.full((b, kvh, g, bq), -jnp.inf, jnp.float32)
+            m, _ = jax.lax.scan(maxstep, m0, (kr, jnp.arange(nk)),
+                                unroll=nk if unroll else 1)
+            m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+
+            def accstep(carry, xs):
+                ssum, u = carry
+                kc, vc, ki = xs
+                s = _grouped_logits(qc, kc, scale)
+                mask = _chunk_mask(qi * bq, ki * bk, bq, bk, causal,
+                                   lq_orig, lk_eff)
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                e = e_int_of(s, m_safe).astype(jnp.float32)
+                ssum = ssum + jnp.sum(e, axis=-1)
+                u = u + jnp.einsum("bngqk,bnkd->bngqd", e,
+                                   vc.astype(jnp.float32))
+                return (ssum, u), None
+
+            s0 = jnp.zeros((b, kvh, g, bq), jnp.float32)
+            u0 = jnp.zeros((b, kvh, g, bq, d), jnp.float32)
+            (ssum, u), _ = jax.lax.scan(accstep, (s0, u0),
+                                        (kr, vr, jnp.arange(nk)),
+                                        unroll=nk if unroll else 1)
+
+            inv = inv_scale(qmax)
+            if policy.impl == "rexp":
+                lut_a = jnp.asarray(tables.lut_alpha, jnp.int32)
+                ja = jnp.clip(rnd(ssum * inv).astype(jnp.int32), 0,
+                              lut_a.shape[0] - 1)
+                alpha = jnp.take(lut_a, ja, axis=0).astype(jnp.float32)
+                return u * (alpha * inv * inv)[..., None]
+            # lut2d fused form: scale U by LUT_σ row value of the mean bin —
+            # the faithful per-element σ is only available in naive/pallas
+            # paths; blocked lut2d divides by the binned denominator instead.
+            lut_sig = tables.lut_sigma
+            n_cols = lut_sig.shape[1]
+            jj = jnp.clip(rnd(ssum * inv_scale(qmax * tables.scale_sum))
+                          .astype(jnp.int32), 1, n_cols).astype(jnp.float32)
+            return u * (inv / (jj * tables.scale_sum))[..., None]
+
+    if unroll:
+        outs = jnp.stack([one_q_chunk(jnp.int32(i)) for i in range(nq)])
+    else:
+        outs = jax.lax.map(one_q_chunk, jnp.arange(nq))  # (nq,B,KVH,G,bq,D)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, kvh, g, lq, d)
+    return out.reshape(b, h, lq, d)[:, :, :lq_orig]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def lut_attention(
+    q: Array, k: Array, v: Array, policy: SoftmaxPolicy, *,
+    causal: bool = False,
+    scale: float | None = None,
+    kv_len: Array | int | None = None,
+    backend: str = "naive",  # 'naive' | 'blocked' | 'pallas'
+    fused_requant: bool = True,
+    interpret: bool = True,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    unroll: bool = False,
+) -> Array:
+    """Attention with the policy's softmax.  See module docstring."""
+    if backend == "pallas" and policy.impl in ("rexp", "lut2d"):
+        assert kv_len is None, "pallas path needs static kv_len"
+        tables = _tables_for(policy)
+        return lut_attention_pallas(
+            q, k, v, tables, method=policy.impl, causal=causal, scale=scale,
+            index_mode=policy.index_mode,
+            lookup="gather" if policy.lookup_impl == "gather" else "select",
+            fused_requant=fused_requant, interpret=interpret)
+    if backend == "blocked":
+        return lut_attention_blocked(q, k, v, policy, causal=causal,
+                                     scale=scale, kv_len=kv_len,
+                                     q_chunk=q_chunk, k_chunk=k_chunk,
+                                     unroll=unroll)
+    # naive
+    if kv_len is not None:
+        ki = jnp.arange(k.shape[2])
+        neg = jnp.where(ki < kv_len, 0.0, -jnp.inf).astype(jnp.float32)
+        # fold the tail mask through an additive bias on k-side logits:
+        return _naive_with_bias(q, k, v, policy, causal, scale, neg,
+                                fused_requant, kv_len)
+    method = policy.impl if policy.impl in ("rexp", "lut2d", "exact") else "exact"
+    tables = _tables_for(policy)
+    return _ref.lut_attention_ref(q, k, v, method=method, tables=tables,
+                                  scale=scale, causal=causal,
+                                  index_mode=policy.index_mode,
+                                  fused_requant=fused_requant)
+
+
+def _naive_with_bias(q, k, v, policy, causal, scale, k_bias, fused_requant,
+                     kv_len):
+    """Naive path with an additive per-key bias (KV-cache tail masking).
+
+    Causal alignment must use the *valid* length (``kv_len``), not the
+    allocated cache length: queries sit at absolute positions
+    [kv_len − lq, kv_len), while the cache may be pre-allocated longer.
+    """
+    b, h, lq, d = q.shape
+    kvh, lk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    s = _ref._logits(q, k, scale, causal=False) \
+        + k_bias[None, None, None, :]
+    if causal:
+        qi = jnp.arange(lq)[:, None] + (kv_len - lq)
+        ki = jnp.arange(lk)[None, :]
+        s = jnp.where((ki <= qi)[None, None], s, -jnp.inf)
+    g = h // kvh
+    vx = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    if policy.impl == "exact":
+        p = _core.softmax_exact(s, axis=-1)
+    elif policy.impl == "rexp":
+        t = _tables_for(policy)
+        p = _core.softmax_rexp(s, t, axis=-1, index_mode=policy.index_mode)
+    else:
+        t = _tables_for(policy)
+        p = _core.softmax_lut2d(s, t, axis=-1, index_mode=policy.index_mode)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx)

@@ -1,0 +1,183 @@
+"""Pallas TPU kernels: row-wise LUT softmax (REXP and 2D-LUT methods).
+
+One grid step processes a ``(block_rows, n_cols)`` tile resident in VMEM;
+the LUTs (≤ 1.5 KB) are replicated to every grid step.  Table reads use
+the ``select`` chain by default (no gather primitive needed — DESIGN.md
+§2); ``gather`` is available for comparison.
+
+The integer pipeline is bit-identical to ``repro.core.lut_softmax``:
+same bin indices, same int32 products, same requantization.  Tests sweep
+shapes × precisions × index modes against the ``ref.py`` oracle.
+
+Full rows must fit in VMEM (fine up to ~16k columns at f32); longer rows
+belong to the *fused attention* kernel which blocks the row dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lut_builder import Lut2DTables, RexpTables
+from repro.core.lut_softmax import inv_scale
+from repro.kernels.common import cdiv, kernel_lookup, pad_axis_to, pick_block_rows, round_up
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# REXP kernel (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def _rexp_kernel(x_ref, lut_re_ref, lut_a_ref, o_ref, *, qmax: int,
+                 index_mode: str, lookup: str):
+    x = x_ref[...].astype(jnp.float32)  # (BR, C)
+    lut_re = lut_re_ref[0, :]
+    lut_a = lut_a_ref[0, :]
+    n_re = lut_re.shape[0]
+    n_a = lut_a.shape[0]
+
+    finite = jnp.isfinite(x)
+    m = jnp.max(jnp.where(finite, x, -jnp.inf), axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    d = jnp.where(finite, m - x, float(n_re - 1))
+
+    rnd = jnp.round if index_mode == "round" else jnp.floor
+    idx = jnp.clip(rnd(d).astype(jnp.int32), 0, n_re - 1)
+    # masked logits → hard zero (terminal LUT entry may be non-zero)
+    e_int = jnp.where(finite, kernel_lookup(lut_re, idx, lookup), 0)
+
+    inv = inv_scale(qmax)
+    s = jnp.sum(e_int.astype(jnp.float32), axis=-1, keepdims=True)
+    ja = jnp.clip(rnd(s * inv).astype(jnp.int32), 0, n_a - 1)
+    alpha = kernel_lookup(lut_a, ja, lookup)  # int32 (BR, 1)
+
+    prod = (e_int * alpha).astype(jnp.float32)
+    sigma_int = jnp.round(prod * inv)
+    o_ref[...] = (sigma_int * inv).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# 2D-LUT kernel (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def _lut2d_kernel(x_ref, lut_e_ref, lut_s_ref, o_ref, *, qmax: int,
+                  exp_step: float, scale_ex: float, scale_sum: float,
+                  index_mode: str, lookup: str):
+    x = x_ref[...].astype(jnp.float32)  # (BR, C)
+    lut_e = lut_e_ref[0, :]
+    lut_sig = lut_s_ref[...]  # (n_rows, n_cols)
+    n_e = lut_e.shape[0]
+    n_rows, n_cols = lut_sig.shape
+
+    finite = jnp.isfinite(x)
+    m = jnp.max(jnp.where(finite, x, -jnp.inf), axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    d = jnp.where(finite, (m - x) * inv_scale(exp_step), float(n_e - 1))
+
+    rnd = jnp.round if index_mode == "round" else jnp.floor
+    idx = jnp.clip(rnd(d).astype(jnp.int32), 0, n_e - 1)
+    # masked logits → hard zero (terminal LUT entry may be non-zero)
+    e_int = jnp.where(finite, kernel_lookup(lut_e, idx, lookup), 0)
+
+    s = jnp.sum(e_int.astype(jnp.float32), axis=-1, keepdims=True)
+
+    i_idx = jnp.clip(rnd(e_int.astype(jnp.float32)
+                         * inv_scale(qmax * scale_ex)).astype(jnp.int32),
+                     0, n_rows - 1)
+    j_idx = jnp.clip(rnd(s * inv_scale(qmax * scale_sum)).astype(jnp.int32),
+                     1, n_cols) - 1  # (BR, 1)
+
+    # 2-D read decomposed into two select chains (no gather):
+    #   column select (per row, over Σ bins) → (BR, n_rows) slice,
+    #   then row select (per element, over numerator bins).
+    sel_col = jnp.zeros((x.shape[0], n_rows), dtype=jnp.int32)
+    for j in range(n_cols):
+        sel_col = jnp.where(j_idx == j, lut_sig[:, j][None, :], sel_col)
+    sigma_int = jnp.zeros_like(e_int)
+    for i in range(n_rows):
+        sigma_int = jnp.where(i_idx == i, sel_col[:, i][:, None], sigma_int)
+
+    o_ref[...] = (sigma_int.astype(jnp.float32)
+                  * inv_scale(qmax)).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def _row_softmax_call(kernel, x: Array, luts: tuple[Array, ...],
+                      block_rows: int | None, interpret: bool) -> Array:
+    """Launch a row-softmax kernel over a 2-D (rows, cols) array."""
+    rows, cols = x.shape
+    br = block_rows or pick_block_rows(cols)
+    br = min(br, round_up(rows, 8))
+    rows_p = round_up(rows, br)
+    xp = pad_axis_to(x, 0, rows_p, 0.0)
+
+    lut_specs = [
+        pl.BlockSpec(l.shape, lambda i, _nd=l.ndim: (0,) * _nd)
+        for l in luts
+    ]
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows_p // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0)), *lut_specs],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, cols), jnp.float32),
+        interpret=interpret,
+    )(xp, *luts)
+    return out[:rows]
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "index_mode", "lookup",
+                                             "block_rows", "interpret"))
+def _rexp_2d(x, lut_re, lut_a, qmax: int, index_mode="round", lookup="select",
+             block_rows=None, interpret=True):
+    kern = functools.partial(_rexp_kernel, qmax=qmax, index_mode=index_mode,
+                             lookup=lookup)
+    return _row_softmax_call(kern, x, (lut_re, lut_a), block_rows, interpret)
+
+
+def rexp_softmax_pallas(x: Array, tables: RexpTables, index_mode: str = "round",
+                        lookup: str = "select", block_rows: int | None = None,
+                        interpret: bool = True) -> Array:
+    """REXP row softmax over the last axis of ``x`` (any leading shape)."""
+    lut_re = jnp.asarray(tables.lut_recip_exp, jnp.int32)[None, :]
+    lut_a = jnp.asarray(tables.lut_alpha, jnp.int32)[None, :]
+    lead = x.shape[:-1]
+    out = _rexp_2d(x.reshape(-1, x.shape[-1]), lut_re, lut_a,
+                   tables.precision.qmax, index_mode, lookup, block_rows,
+                   interpret)
+    return out.reshape(*lead, x.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "exp_step", "scale_ex",
+                                             "scale_sum", "index_mode",
+                                             "lookup", "block_rows", "interpret"))
+def _lut2d_2d(x, lut_e, lut_s, qmax: int, exp_step: float, scale_ex: float,
+              scale_sum: float, index_mode="round", lookup="select",
+              block_rows=None, interpret=True):
+    kern = functools.partial(_lut2d_kernel, qmax=qmax, exp_step=exp_step,
+                             scale_ex=scale_ex, scale_sum=scale_sum,
+                             index_mode=index_mode, lookup=lookup)
+    return _row_softmax_call(kern, x, (lut_e, lut_s), block_rows, interpret)
+
+
+def lut2d_softmax_pallas(x: Array, tables: Lut2DTables, index_mode: str = "round",
+                         lookup: str = "select", block_rows: int | None = None,
+                         interpret: bool = True) -> Array:
+    """2D-LUT row softmax over the last axis of ``x`` (any leading shape)."""
+    lut_e = jnp.asarray(tables.lut_exp, jnp.int32)[None, :]
+    lut_s = jnp.asarray(tables.lut_sigma, jnp.int32)
+    lead = x.shape[:-1]
+    out = _lut2d_2d(x.reshape(-1, x.shape[-1]), lut_e, lut_s,
+                    tables.precision.qmax, tables.exp_step, tables.scale_ex,
+                    tables.scale_sum, index_mode, lookup, block_rows, interpret)
+    return out.reshape(*lead, x.shape[-1])

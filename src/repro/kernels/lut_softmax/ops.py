@@ -1,0 +1,45 @@
+"""Public jit'd API for the LUT-softmax kernels.
+
+``lut_softmax(x, policy)`` routes by :class:`SoftmaxPolicy`:
+  * ``use_kernel=True``  → Pallas kernel (interpret mode off-TPU).
+  * ``use_kernel=False`` → the pure-jnp core semantics (XLA path — also
+    what the multi-pod dry-run lowers, since Mosaic can't compile without
+    a TPU backend in this container).
+Both paths share bit-identical integer semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import lut_builder
+from repro.core.lut_softmax import make_softmax_fn
+from repro.core.policies import SoftmaxPolicy
+from repro.kernels.lut_softmax.lut_softmax import (
+    lut2d_softmax_pallas,
+    rexp_softmax_pallas,
+)
+
+Array = jax.Array
+
+
+def lut_softmax(x: Array, policy: SoftmaxPolicy, axis: int = -1,
+                interpret: bool = True) -> Array:
+    """Softmax under ``policy`` (kernel or XLA path)."""
+    if not policy.use_kernel or policy.impl in ("exact", "rexp_unnorm",
+                                                "log2_prior"):
+        return make_softmax_fn(policy)(x, axis=axis)
+    if axis not in (-1, x.ndim - 1):
+        x = jax.numpy.moveaxis(x, axis, -1)
+        out = lut_softmax(x, policy, axis=-1, interpret=interpret)
+        return jax.numpy.moveaxis(out, -1, axis)
+    lookup = "gather" if policy.lookup_impl == "gather" else "select"
+    if policy.impl == "rexp":
+        t = lut_builder.build_rexp_tables(policy.precision, policy.alpha_len)
+        return rexp_softmax_pallas(x, t, policy.index_mode, lookup,
+                                   interpret=interpret)
+    if policy.impl == "lut2d":
+        t = lut_builder.build_lut2d_tables(policy.precision)
+        return lut2d_softmax_pallas(x, t, policy.index_mode, lookup,
+                                    interpret=interpret)
+    raise ValueError(f"unsupported kernel impl {policy.impl!r}")

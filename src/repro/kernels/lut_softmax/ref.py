@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the LUT-softmax kernels.
+
+Delegates to ``repro.core.lut_softmax`` — the canonical semantics the
+kernels must match bit-exactly on the integer pipeline.  The oracle here
+additionally exposes the intermediate integer tensors so kernel tests can
+compare stage-by-stage, not just end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut_builder import Lut2DTables, RexpTables
+from repro.core import lut_softmax as _core
+
+Array = jax.Array
+
+
+def rexp_softmax_ref(x: Array, tables: RexpTables, index_mode: str = "round") -> Array:
+    """Row softmax (last axis) via REXP — the oracle for the Pallas kernel."""
+    return _core.softmax_rexp(x, tables, axis=-1, index_mode=index_mode)
+
+
+def lut2d_softmax_ref(x: Array, tables: Lut2DTables, index_mode: str = "round") -> Array:
+    """Row softmax (last axis) via 2D-LUT — the oracle for the Pallas kernel."""
+    return _core.softmax_lut2d(x, tables, axis=-1, index_mode=index_mode)
+
+
+def rexp_stages_ref(x: Array, tables: RexpTables, index_mode: str = "round"):
+    """Intermediate integer tensors (e_int, S, α_int, σ_int) for debugging."""
+    qmax = tables.precision.qmax
+    e_int = _core.rexp_exp_int(x, tables, axis=-1, index_mode=index_mode)
+    s = jnp.sum(e_int.astype(jnp.float32), axis=-1, keepdims=True)
+    idx_a = _core.rexp_alpha_index(s, tables, index_mode)
+    alpha = jnp.take(jnp.asarray(tables.lut_alpha, jnp.int32), idx_a, axis=0)
+    sigma_int = jnp.round((e_int * alpha).astype(jnp.float32) / qmax).astype(jnp.int32)
+    return e_int, s, alpha, sigma_int

@@ -1,0 +1,191 @@
+"""Cell builder: (arch × shape × mesh) → lowerable program + abstract args.
+
+A *cell* is one benchmark point.  ``build_cell`` returns the step
+function and its ShapeDtypeStruct arguments (sharding-annotated, zero
+allocation) for:
+
+  * train   — full train_step (fwd + bwd + AdamW), microbatched
+  * prefill — serve prefill (fills KV caches, last-token logits)
+  * decode  — one serve decode step against a full-length cache
+
+plus a ``probe`` toggle that switches to the roofline configuration
+(layers unrolled at reduced depth, naive attention, no microbatching) —
+see EXPERIMENTS.md §Methodology for why probes must avoid XLA loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
+from repro.core.policies import EXACT, SoftmaxPolicy
+from repro.models import build_model
+from repro.models.model_zoo import Model
+from repro.optim.adamw import AdamWState
+from repro.runtime import partitioning as PT
+from repro.runtime.serve_loop import make_decode_step, make_prefill_step
+from repro.runtime.train_loop import TrainState, init_train_state, make_train_step
+
+PAPER_SERVE_POLICY = SoftmaxPolicy(impl="rexp", precision="uint8")
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    run: RunConfig
+    model: Model
+    fn: Callable            # the step function to jit/lower
+    args: tuple             # ShapeDtypeStructs with shardings
+    out_shardings: Any      # or None
+    n_periods: int          # depth actually lowered (probes reduce this)
+
+
+def _struct(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(struct_tree, shardings_tree):
+    return jax.tree_util.tree_map(
+        lambda st, sh: _struct(st.shape, st.dtype, sh),
+        struct_tree, shardings_tree)
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda st: _struct(st.shape, dtype, getattr(st, "sharding", None))
+        if jnp.issubdtype(st.dtype, jnp.floating) else st, tree)
+
+
+def make_run(arch: ArchConfig, shape: ShapeConfig, *, probe: bool = False,
+             serve_policy: SoftmaxPolicy = PAPER_SERVE_POLICY,
+             microbatch: int | None = None,
+             overrides: dict | None = None) -> RunConfig:
+    kind = shape.kind
+    kw: dict = dict(
+        dtype="bfloat16",
+        softmax_policy=EXACT if kind == "train" else serve_policy,
+        # Probes lower NAIVE attention: its op-level byte count is a
+        # clean upper bound (materialized L×L logits).  §Perf iteration 4
+        # tried unrolled-blocked probes and REFUTED them: XLA's
+        # "bytes accessed" counts every tile re-read as HBM traffic even
+        # though the Pallas kernels keep tiles VMEM-resident, and
+        # autodiffing the online-softmax rescale chain doubles flops.
+        # The flash-corrected attention bytes are reported analytically
+        # for the hillclimbed cells instead (EXPERIMENTS.md §Perf).
+        attention_backend="naive" if (probe or kind == "train")
+        else "blocked",
+        probe_unroll=False,
+        scan_layers=not probe,
+        remat=kind == "train",
+        microbatch=1 if probe else (
+            microbatch if microbatch is not None
+            else (4 if kind == "train" else 1)),
+        shard_kv_seq=shape.name == "long_500k",
+        ssm_chunk=256,
+        q_chunk=512,
+        k_chunk=2048,
+    )
+    kw.update(overrides or {})
+    return RunConfig(**kw)
+
+
+def _encoder_struct(arch: ArchConfig, b: int, mesh: Mesh, dtype):
+    if arch.encoder_layers == 0:
+        return None
+    sh = NamedSharding(mesh, P(*PT.batch_pspec(mesh, b), None, None))
+    return _struct((b, arch.encoder_seq, arch.d_model), dtype, sh)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh: Mesh, *,
+               probe: bool = False, probe_periods: int = 1,
+               serve_policy: SoftmaxPolicy = PAPER_SERVE_POLICY,
+               run_overrides: dict | None = None) -> Cell:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    if probe:
+        arch = arch.with_layers(probe_periods)
+    run = make_run(arch, shape, probe=probe, overrides=run_overrides)
+    model = build_model(arch)
+    key = jax.random.PRNGKey(0)
+    b, s = shape.global_batch, shape.seq_len
+    bf16 = jnp.bfloat16
+
+    if shape.kind == "train":
+        state_struct = jax.eval_shape(
+            lambda k: init_train_state(model, k, run), key)
+        psh = PT.make_param_shardings(state_struct.params, mesh)
+        state_sh = TrainState(
+            params=psh,
+            opt=AdamWState(step=NamedSharding(mesh, P()),
+                           m=PT.make_param_shardings(state_struct.opt.m,
+                                                     mesh),
+                           v=PT.make_param_shardings(state_struct.opt.v,
+                                                     mesh)),
+            ef=None,
+        )
+        state_arg = _with_shardings(state_struct, state_sh)
+        tok_sh = PT.tokens_sharding(mesh, b)
+        batch = {"tokens": _struct((b, s + 1), jnp.int32, tok_sh)}
+        if arch.encoder_layers:
+            batch["encoder_input"] = _encoder_struct(arch, b, mesh, bf16)
+        fn = make_train_step(model, run)
+        return Cell(arch, shape, mesh, run, model, fn,
+                    (state_arg, batch), (state_sh, None), arch.n_periods)
+
+    # serving cells: bf16 params, FSDP+TP sharded.  §Perf iteration 6
+    # tried TP-only serving weights (to kill per-step weight gathers) and
+    # REVERTED it: the gathers were negligible (the decode wire was the
+    # KV-cache gathers, fixed by iteration 7), while data-axis
+    # replication ballooned live bytes (mistral decode 21.8→59.7 GiB/dev).
+    params_struct = _cast_tree(jax.eval_shape(model.init, key), bf16)
+    psh = PT.make_param_shardings(params_struct, mesh)
+    params_arg = _with_shardings(params_struct, psh)
+
+    if shape.kind == "prefill":
+        tok_sh = PT.tokens_sharding(mesh, b)
+        tokens = _struct((b, s), jnp.int32, tok_sh)
+        enc = _encoder_struct(arch, b, mesh, bf16)
+        state_struct = model.decode_state_struct(b, s, run)
+        cache_sh = PT.make_cache_shardings(
+            state_struct, mesh, b, arch.n_kv_heads, run.shard_kv_seq,
+            stacked=not model.is_encdec)
+        fn0 = make_prefill_step(model, run, max_len=s)
+        if enc is not None:
+            def fn(params, tokens, encoder_input):
+                return fn0(params, tokens, encoder_input=encoder_input)
+            args = (params_arg, tokens, enc)
+        else:
+            fn = fn0
+            args = (params_arg, tokens)
+        return Cell(arch, shape, mesh, run, model, fn, args,
+                    (None, cache_sh), arch.n_periods)
+
+    # decode
+    tok_sh = PT.tokens_sharding(mesh, b)
+    token = _struct((b, 1), jnp.int32, tok_sh)
+    state_struct = model.decode_state_struct(b, s, run)
+    cache_sh = PT.make_cache_shardings(
+        state_struct, mesh, b, arch.n_kv_heads, run.shard_kv_seq,
+        stacked=not model.is_encdec)
+    state_arg = _with_shardings(state_struct, cache_sh)
+    fn = make_decode_step(model, run)
+    return Cell(arch, shape, mesh, run, model, fn,
+                (params_arg, token, state_arg), (None, cache_sh),
+                arch.n_periods)
+
+
+def lower_cell(cell: Cell):
+    PT.set_active_mesh(cell.mesh)
+    try:
+        jitted = jax.jit(cell.fn, out_shardings=cell.out_shardings)
+        return jitted.lower(*cell.args)
+    finally:
+        PT.set_active_mesh(None)

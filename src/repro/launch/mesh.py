@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Functions, not module constants — importing this module never touches
+jax device state (device count is locked at first jax init, and only
+``dryrun.py`` forces the 512-placeholder-device configuration).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over the real host devices (tests / examples)."""
+    n = len(jax.devices())
+    data = data if data is not None else max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

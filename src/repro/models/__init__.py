@@ -1,0 +1,12 @@
+"""Model zoo: composable layers + the assigned architecture families.
+
+  layers       norms, RoPE, GQA attention (pluggable softmax), MLP, heads
+  moe          shared+routed top-k experts (GShard einsum dispatch, EP)
+  ssm          Mamba (chunked selective scan), xLSTM mLSTM/sLSTM
+  transformer  period-structured decoder LM (scan or unrolled)
+  encdec       Whisper-style encoder-decoder (stub conv frontend)
+  model_zoo    uniform Model interface (train_logits/prefill/decode_step)
+"""
+from repro.models.model_zoo import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,79 @@
+"""Uniform model interface over the zoo (decoder LMs and enc-dec)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """cfg + the four entry points every arch exposes.
+
+    ``train_logits(params, tokens, run, encoder_input=None, collector=None)``
+    ``prefill(params, tokens, run, max_len, encoder_input=None)``
+    ``decode_step(params, token, state, run)``
+    """
+
+    cfg: ArchConfig
+    is_encdec: bool
+
+    def init(self, key) -> Any:
+        if self.is_encdec:
+            return ED.init_params(key, self.cfg)
+        return TF.init_params(key, self.cfg)
+
+    def train_logits(self, params, tokens, run: RunConfig,
+                     encoder_input=None, collector=None):
+        if self.is_encdec:
+            return ED.train_logits(params, tokens, self.cfg, run,
+                                   encoder_input, collector=collector)
+        return TF.train_logits(params, tokens, self.cfg, run,
+                               collector=collector)
+
+    def prefill(self, params, tokens, run: RunConfig, max_len: int,
+                encoder_input=None, logits: str = "all"):
+        if self.is_encdec:
+            return ED.prefill(params, tokens, self.cfg, run, max_len,
+                              encoder_input, logits=logits)
+        return TF.prefill(params, tokens, self.cfg, run, max_len,
+                          logits=logits)
+
+    def decode_step(self, params, token, state, run: RunConfig):
+        if self.is_encdec:
+            return ED.decode_step(params, token, state, self.cfg, run)
+        return TF.decode_step(params, token, state, self.cfg, run)
+
+    def decode_state_struct(self, b: int, max_len: int, run: RunConfig):
+        """Abstract (ShapeDtypeStruct) serving state — no allocation."""
+        import jax.numpy as jnp
+        dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
+        cfg = self.cfg
+        if not self.is_encdec:
+            return jax.eval_shape(
+                lambda: TF.init_caches(cfg, b, max_len, dtype))
+        from repro.models import layers as Lm
+
+        def build():
+            caches = [Lm.AttnCache.zeros(b, cfg.n_kv_heads, max_len,
+                                         cfg.resolved_head_dim, dtype)
+                      for _ in range(cfg.n_layers)]
+            import jax.numpy as jnp2
+            cross = [(jnp2.zeros((b, cfg.n_kv_heads, cfg.encoder_seq,
+                                  cfg.resolved_head_dim), dtype),) * 2
+                     for _ in range(cfg.n_layers)]
+            return (caches, cross)
+
+        return jax.eval_shape(build)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg, is_encdec=cfg.encoder_layers > 0)

@@ -1,0 +1,147 @@
+"""Mixture-of-Experts layer — GShard-style einsum dispatch (EP-shardable).
+
+Covers the three assigned MoE shapes:
+  * deepseek-moe-16b  — 2 shared + 64 routed experts, top-6, fine-grained
+  * granite-moe-3b    — 40 routed experts, top-8
+  * jamba-v0.1-52b    — 16 routed experts, top-2 (every other layer)
+
+Routing uses a *softmax over experts* — a second, smaller instance of the
+paper's target op.  ``router_policy`` lets serving route through the LUT
+approximation there too (beyond-paper extension; exact by default).
+
+The dispatch/combine are dense one-hot einsums with a capacity factor —
+the standard SPMD-shardable formulation (dispatch tensor sharded over
+tokens × experts; expert weight tensors sharded over the 'model'/EP axis;
+XLA emits the all-to-alls).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import EXACT, SoftmaxPolicy
+from repro.core.lut_softmax import make_softmax_fn
+from repro.models.layers import dense_init, init_mlp, apply_mlp
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def init_moe(key, d_model: int, d_expert: int, n_experts: int,
+             n_shared: int = 0) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d_model, n_experts)),
+        # experts stacked on axis 0 → shardable over the EP ('model') axis
+        "w_gate": dense_init(ks[1], (n_experts, d_model, d_expert),
+                             in_axis_size=d_model),
+        "w_up": dense_init(ks[2], (n_experts, d_model, d_expert),
+                           in_axis_size=d_model),
+        "w_down": dense_init(ks[3], (n_experts, d_expert, d_model),
+                             in_axis_size=d_expert),
+    }
+    if n_shared > 0:
+        p["shared"] = init_mlp(jax.random.fold_in(key, 7), d_model,
+                               d_expert * n_shared)
+    return p
+
+
+def apply_moe(
+    p: Params, x: Array, *,
+    n_experts: int, top_k: int,
+    capacity_factor: float = 1.25,
+    router_policy: SoftmaxPolicy = EXACT,
+    return_aux: bool = True,
+    group_size: int = 4096,
+) -> tuple[Array, dict]:
+    """x (B, S, D) → (out, aux).  aux['load_balance_loss'] is the standard
+    Switch-style auxiliary loss (mean fraction × mean router prob × E).
+
+    Dispatch is GROUPED (GShard style): tokens are split into groups of
+    ``group_size`` and capacity applies per group, so the one-hot
+    dispatch/combine tensors are (G, g, E, C_g) with total size
+    T·E·C_g·… LINEAR in T.  (A global-capacity dispatch is (T, E, C) with
+    C ∝ T — quadratic; at 1M train tokens that single choice put the
+    baseline MoE cells at 10^13 dispatch elements.  See EXPERIMENTS.md
+    §Perf iteration 1.)
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))          # (T, E)
+    probs = make_softmax_fn(router_policy)(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)       # renormalize top-k
+
+    # group the token axis; pad the tail group (padding never routes:
+    # its gate weights are zeroed through `keep`)
+    g = min(group_size, t)
+    n_groups = -(-t // g)
+    t_pad = n_groups * g
+    valid = jnp.arange(t_pad) < t
+    if t_pad != t:
+        pad = [(0, t_pad - t)]
+        xt = jnp.pad(xt, pad + [(0, 0)])
+        gate_vals = jnp.pad(gate_vals, pad + [(0, 0)])
+        gate_idx = jnp.pad(gate_idx, pad + [(0, 0)])
+    gate_vals = gate_vals * valid[:, None]
+
+    # Capacity per group: GShard formula at scale, but never drop below
+    # full coverage for small groups — decode (T = B·1) and short
+    # prefills must be drop-free so decode ≡ teacher-forced forward.
+    capacity = max(int(capacity_factor * top_k * g / n_experts),
+                   min(g, 256))
+
+    gv = gate_vals.reshape(n_groups, g, top_k)
+    gi = gate_idx.reshape(n_groups, g, top_k)
+    xg = xt.reshape(n_groups, g, d)
+
+    # Position of each (token, k) assignment within its expert's
+    # per-group buffer.
+    assign = jax.nn.one_hot(gi, n_experts, dtype=jnp.int32)  # (G,g,K,E)
+    flat = assign.reshape(n_groups, g * top_k, n_experts)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        n_groups, g, top_k, n_experts)
+    pos = jnp.sum(pos_in_expert * assign, axis=-1)          # (G,g,K)
+    keep = pos < capacity
+
+    # dispatch (G, g, E, C) one-hot; combine adds the gate weights.
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=x.dtype)   # (G,g,K,C)
+    masked = (assign * keep[..., None]).astype(x.dtype)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", masked, pos_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec",
+                         masked.astype(jnp.float32),
+                         pos_oh.astype(jnp.float32),
+                         gv).astype(x.dtype)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)  # (G,E,C,D)
+    gate = jnp.einsum("gecd,edf->gecf", expert_in,
+                      p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    expert_out = jnp.einsum("gecf,efd->gecd", h,
+                            p["w_down"].astype(x.dtype))    # (G,E,C,D)
+
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+    out = out.reshape(t_pad, d)[:t]
+
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], xt[:t])
+
+    aux = {}
+    if return_aux:
+        # Switch load-balance loss: E · Σ_e f_e · P_e
+        me = jnp.mean(probs, axis=0)                        # (E,)
+        ce = jnp.mean(
+            jnp.sum(jax.nn.one_hot(gate_idx, n_experts), axis=1), axis=0)
+        aux["load_balance_loss"] = n_experts * jnp.sum(me * ce)
+        aux["router_entropy"] = -jnp.mean(
+            jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1))
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,368 @@
+"""State-space / recurrent blocks: Mamba (for Jamba) and xLSTM (m/sLSTM).
+
+These are the attention-free mixers of the assigned pool.  The paper's
+LUT-softmax does not apply inside them (no softmax — see DESIGN.md
+§Arch-applicability); they matter here because (a) Jamba interleaves
+them 7:1 with attention layers that DO use it, and (b) they carry the
+``long_500k`` sub-quadratic decode cells.
+
+TPU-oriented choices:
+  * Mamba uses a *chunked* selective scan: sequential ``lax.scan`` over
+    chunks, parallel ``associative_scan`` within a chunk.  Working set is
+    O(chunk · d_inner · d_state) — VMEM/HBM-friendly — and the backward
+    pass saves only chunk-boundary carries (inner chunk is rematerialized).
+  * mLSTM/sLSTM are sequential recurrences (sLSTM has recurrent weights —
+    no parallel form exists); they run under ``chunked_scan`` with remat
+    so training memory is O(S/chunk) states, not O(S).
+
+Decode paths are single-step state updates against a cache pytree.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Chunked scan helper
+# ---------------------------------------------------------------------------
+
+
+def chunked_scan(step_fn, carry, xs_time_major, chunk: int, remat: bool = True):
+    """scan(step_fn) over time with chunked remat.
+
+    ``xs_time_major``: pytree with leading axis S (padded internally to a
+    chunk multiple).  Padded steps are identity on the carry — the final
+    state stays the true position-S state (prefill writes it to the
+    cache).  Backward saves carries only at chunk boundaries; inner steps
+    recompute.
+    """
+    s = jax.tree_util.tree_leaves(xs_time_major)[0].shape[0]
+    nc = max(1, math.ceil(s / chunk))
+    pad = nc * chunk - s
+    if pad:
+        xs_time_major = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1)),
+            xs_time_major)
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape(nc, chunk, *a.shape[1:]), xs_time_major)
+    idx_c = jnp.arange(nc * chunk, dtype=jnp.int32).reshape(nc, chunk)
+
+    def masked_step(c, ix):
+        i, x = ix
+        new_c, y = step_fn(c, x)
+        keep = i < s
+        new_c = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(keep, a, b), new_c, c)
+        return new_c, y
+
+    def inner(c, xc):
+        return jax.lax.scan(masked_step, c, xc)
+
+    if remat:
+        inner = jax.checkpoint(inner)
+    carry, ys = jax.lax.scan(inner, carry, (idx_c, xs_c))
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape(nc * chunk, *a.shape[2:])[:s], ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — Jamba's majority mixer
+# ---------------------------------------------------------------------------
+
+D_STATE = 16
+D_CONV = 4
+EXPAND = 2
+
+
+def init_mamba(key, d_model: int) -> Params:
+    d_inner = EXPAND * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.tile(jnp.arange(1, D_STATE + 1, dtype=jnp.float32)[None, :],
+                      (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner)),
+        "conv_w": dense_init(ks[1], (D_CONV, d_inner), in_axis_size=D_CONV),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * D_STATE),
+                             in_axis_size=d_inner),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), in_axis_size=dt_rank),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+            jnp.exp(jax.random.uniform(ks[4], (d_inner,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_inner, d_model),
+                               in_axis_size=d_inner),
+    }
+
+
+def _mamba_ssm_inputs(p: Params, xc: Array):
+    """Per-token SSM tensors from the post-conv activations xc (B,S,DI)."""
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt, bmat, cmat = jnp.split(
+        proj.astype(jnp.float32), [dt_rank, dt_rank + D_STATE], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32)
+                            + p["dt_bias"])                    # (B,S,DI)
+    return delta, bmat, cmat
+
+
+def _causal_depthwise_conv(x: Array, w: Array, b: Array) -> Array:
+    """x (B,S,DI); w (K,DI) depthwise causal conv along S."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def apply_mamba(p: Params, x: Array, *, chunk: int = 128,
+                cache: dict | None = None,
+                remat: bool = True,
+                unroll: bool = False) -> tuple[Array, dict | None]:
+    """Mamba block.  x (B,S,D).  cache={'h': (B,DI,N), 'conv': (B,K-1,DI)}.
+
+    Modes: no cache → parallel chunked scan (train); cache + S>1 →
+    prefill (parallel scan seeded from / writing back the cache state);
+    cache + S==1 → single-step decode recurrence.
+    """
+    b, s, d = x.shape
+    d_inner = EXPAND * d
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)
+
+    new_cache = None
+    if cache is None or s > 1:
+        xc = _causal_depthwise_conv(xr, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+        delta, bmat, cmat = _mamba_ssm_inputs(p, xc)
+        a = -jnp.exp(p["a_log"])                              # (DI,N)
+
+        # time-major chunked selective scan
+        xs = (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(bmat, 1, 0),
+              jnp.moveaxis(cmat, 1, 0),
+              jnp.moveaxis(xc.astype(jnp.float32), 1, 0))
+
+        def combine(u, w):
+            (a1, b1), (a2, b2) = u, w
+            return a1 * a2, a2 * b1 + b2
+
+        # intra-chunk parallelism needs associative_scan, so we hand-roll
+        # the chunked loop here instead of using chunked_scan's step-wise
+        # inner scan.
+        nc = math.ceil(s / chunk)
+        pad = nc * chunk - s
+        xs = jax.tree_util.tree_map(
+            lambda t: jnp.pad(t, [(0, pad)] + [(0, 0)] * (t.ndim - 1)), xs)
+        xs = jax.tree_util.tree_map(
+            lambda t: t.reshape(nc, chunk, *t.shape[1:]), xs)
+
+        def outer(h, xs_c):
+            delta_c, b_c, c_c, x_c = xs_c  # (Cn, B, ...)
+            decay = jnp.exp(delta_c[..., None] * a)           # (Cn,B,DI,N)
+            drive = ((delta_c * x_c)[..., None]
+                     * b_c[:, :, None, :])                    # (Cn,B,DI,N)
+            af, bf = jax.lax.associative_scan(combine, (decay, drive), axis=0)
+            h_all = bf + af * h[None]
+            y = jnp.einsum("cbdn,cbn->cbd", h_all, c_c)
+            return h_all[-1], y
+
+        if remat:
+            outer = jax.checkpoint(outer)
+        h0 = (cache["h"] if cache is not None
+              else jnp.zeros((b, d_inner, D_STATE), jnp.float32))
+        h_last, y = jax.lax.scan(outer, h0, xs,
+                                 unroll=nc if unroll else 1)
+        y = jnp.moveaxis(y.reshape(nc * chunk, b, d_inner)[:s], 0, 1)
+        y = y + p["d_skip"] * xc.astype(jnp.float32)
+        if cache is not None:  # prefill: persist final SSM + conv state
+            tail = jnp.concatenate([cache["conv"], xr], axis=1)[:, -(D_CONV - 1):]
+            new_cache = {"h": h_last, "conv": tail}
+    else:
+        assert s == 1
+        conv_buf = jnp.concatenate([cache["conv"], xr], axis=1)  # (B,K,DI)
+        w = p["conv_w"].astype(x.dtype)
+        xc = jnp.einsum("bkd,kd->bd", conv_buf, w) + p["conv_b"].astype(x.dtype)
+        xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)[:, None]
+        delta, bmat, cmat = _mamba_ssm_inputs(p, xc)
+        a = -jnp.exp(p["a_log"])
+        decay = jnp.exp(delta[:, 0, :, None] * a)             # (B,DI,N)
+        drive = ((delta[:, 0] * xc[:, 0].astype(jnp.float32))[..., None]
+                 * bmat[:, 0, None, :])
+        h = decay * cache["h"] + drive
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+        y = y + p["d_skip"] * xc.astype(jnp.float32)
+        new_cache = {"h": h, "conv": conv_buf[:, 1:]}
+
+    out = (y.astype(x.dtype)
+           * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    return out @ p["out_proj"].astype(x.dtype), new_cache
+
+
+def mamba_cache(b: int, d_model: int, dtype) -> dict:
+    d_inner = EXPAND * d_model
+    return {"h": jnp.zeros((b, d_inner, D_STATE), jnp.float32),
+            "conv": jnp.zeros((b, D_CONV - 1, d_inner), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — mLSTM (matrix memory) and sLSTM (scalar memory, recurrent weights)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int) -> Params:
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], (d_model, 2 * d_model)),
+        "wq": dense_init(ks[1], (d_model, d_model)),
+        "wk": dense_init(ks[2], (d_model, d_model)),
+        "wv": dense_init(ks[3], (d_model, d_model)),
+        "w_igate": dense_init(ks[4], (d_model, n_heads)),
+        "w_fgate": dense_init(ks[5], (d_model, n_heads)),
+        "fgate_bias": 3.0 * jnp.ones((n_heads,), jnp.float32),
+        "down_proj": dense_init(ks[6], (d_model, d_model)),
+    }
+
+
+def apply_mlstm(p: Params, x: Array, *, n_heads: int, chunk: int = 64,
+                cache: dict | None = None,
+                remat: bool = True) -> tuple[Array, dict | None]:
+    """mLSTM block (exponential gating, matrix memory, stabilizer state)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    up = x @ p["up_proj"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+
+    def heads(w):
+        return (xm @ w.astype(x.dtype)).reshape(b, s, n_heads, dh)
+
+    q = heads(p["wq"]).astype(jnp.float32) * (dh ** -0.5)
+    k = heads(p["wk"]).astype(jnp.float32) * (dh ** -0.5)
+    v = heads(p["wv"]).astype(jnp.float32)
+    ig = (xm.astype(jnp.float32) @ p["w_igate"])              # (B,S,H)
+    fg = (xm.astype(jnp.float32) @ p["w_fgate"]) + p["fgate_bias"]
+
+    def cell(carry, xs):
+        cmat, n, m = carry              # (B,H,dh,dh), (B,H,dh), (B,H)
+        qt, kt, vt, igt, fgt = xs       # (B,H,dh)... (B,H)
+        logf = jax.nn.log_sigmoid(fgt)
+        m_new = jnp.maximum(logf + m, igt)
+        fprime = jnp.exp(logf + m - m_new)[..., None]
+        iprime = jnp.exp(igt - m_new)[..., None]
+        cmat = (cmat * fprime[..., None]
+                + (iprime[..., None] * vt[..., :, None] * kt[..., None, :]))
+        n = n * fprime + iprime * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(n * qt, axis=-1, keepdims=True)), 1.0)
+        h = jnp.einsum("bhij,bhj->bhi", cmat, qt) / denom
+        return (cmat, n, m_new), h
+
+    if cache is None or s > 1:
+        carry = ((cache["c"], cache["n"], cache["m"]) if cache is not None
+                 else (jnp.zeros((b, n_heads, dh, dh), jnp.float32),
+                       jnp.zeros((b, n_heads, dh), jnp.float32),
+                       jnp.zeros((b, n_heads), jnp.float32)))
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+                   (q, k, v, ig, fg))
+        carry, hs = chunked_scan(cell, carry, xs, chunk, remat)
+        h = jnp.moveaxis(hs, 0, 1)      # (B,S,H,dh)
+        new_cache = ({"c": carry[0], "n": carry[1], "m": carry[2]}
+                     if cache is not None else None)
+    else:
+        carry = (cache["c"], cache["n"], cache["m"])
+        carry, h1 = cell(carry, tuple(t[:, 0] for t in (q, k, v, ig, fg)))
+        h = h1[:, None]
+        new_cache = {"c": carry[0], "n": carry[1], "m": carry[2]}
+
+    h = h.reshape(b, s, d).astype(x.dtype)
+    out = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return out @ p["down_proj"].astype(x.dtype), new_cache
+
+
+def mlstm_cache(b: int, d_model: int, n_heads: int) -> dict:
+    dh = d_model // n_heads
+    return {"c": jnp.zeros((b, n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((b, n_heads, dh), jnp.float32),
+            "m": jnp.zeros((b, n_heads), jnp.float32)}
+
+
+def init_slstm(key, d_model: int, n_heads: int) -> Params:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model)),  # z,i,f,o pre-acts
+        # block-diagonal recurrent weights (per head)
+        "r_z": dense_init(ks[1], (n_heads, dh, dh), in_axis_size=dh),
+        "r_i": dense_init(ks[2], (n_heads, dh, dh), in_axis_size=dh),
+        "r_f": dense_init(ks[3], (n_heads, dh, dh), in_axis_size=dh),
+        "r_o": dense_init(ks[4], (n_heads, dh, dh), in_axis_size=dh),
+        "fgate_bias": 3.0 * jnp.ones((d_model,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_model, d_model)),
+    }
+
+
+def apply_slstm(p: Params, x: Array, *, n_heads: int, chunk: int = 64,
+                cache: dict | None = None,
+                remat: bool = True) -> tuple[Array, dict | None]:
+    """sLSTM block — true recurrence (block-diagonal recurrent weights)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    pre = (x @ p["w_in"].astype(x.dtype)).astype(jnp.float32)
+    zx, ix, fx, ox = jnp.split(pre, 4, axis=-1)               # (B,S,D) each
+    fx = fx + p["fgate_bias"]
+
+    def rec(w, h):  # h (B,H,dh) → (B,H,dh)
+        return jnp.einsum("bhj,hji->bhi", h, w)
+
+    def cell(carry, xs):
+        c, n, h, m = carry              # (B,H,dh) ×3, (B,H,dh) stabilizer
+        zt, it, ft, ot = (t.reshape(b, n_heads, dh) for t in xs)
+        zt = jnp.tanh(zt + rec(p["r_z"], h))
+        it = it + rec(p["r_i"], h)
+        ft = ft + rec(p["r_f"], h)
+        ot = jax.nn.sigmoid(ot + rec(p["r_o"], h))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fprime = jnp.exp(logf + m - m_new)
+        iprime = jnp.exp(it - m_new)
+        c = fprime * c + iprime * zt
+        n = fprime * n + iprime
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    if cache is None or s > 1:
+        zero = jnp.zeros((b, n_heads, dh), jnp.float32)
+        carry = ((cache["c"], cache["n"], cache["h"], cache["m"])
+                 if cache is not None else (zero, zero, zero, zero))
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (zx, ix, fx, ox))
+        carry, hs = chunked_scan(cell, carry, xs, chunk, remat)
+        h = jnp.moveaxis(hs, 0, 1)
+        new_cache = (dict(zip(("c", "n", "h", "m"), carry))
+                     if cache is not None else None)
+    else:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        carry, h1 = cell(carry, tuple(t[:, 0] for t in (zx, ix, fx, ox)))
+        h = h1[:, None]
+        new_cache = dict(zip(("c", "n", "h", "m"), carry))
+
+    h = h.reshape(b, s, d).astype(x.dtype)
+    return h @ p["out_proj"].astype(x.dtype), new_cache
+
+
+def slstm_cache(b: int, d_model: int, n_heads: int) -> dict:
+    dh = d_model // n_heads
+    zero = jnp.zeros((b, n_heads, dh), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero, "m": zero}

@@ -1,0 +1,271 @@
+"""Decoder-only LM assembled from an ArchConfig's layer periods.
+
+Supports every assigned LM family through the period mechanism:
+  dense (period = [attn+mlp]), MoE (attn+moe), Jamba (7×mamba : 1×attn,
+  alternating mlp/moe), xLSTM (mlstm/slstm, ffn='none').
+
+Execution modes:
+  * ``train_logits``  — full sequence, causal, no cache (exact softmax).
+  * ``prefill``       — fills pre-allocated caches, returns all logits.
+  * ``decode_step``   — one token against the caches (serving; the LUT
+                        softmax policy is active here and in prefill).
+
+``run.scan_layers`` selects jax.lax.scan over periods (the real program —
+one period is the HLO loop body) vs Python unrolling (roofline probes and
+tiny smoke models).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec, RunConfig
+from repro.core.policies import EXACT, SoftmaxPolicy
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig, spec: LayerSpec) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(ks[0], cfg.d_model)}
+    if spec.mixer == "attn":
+        p["mixer"] = L.init_attention(
+            ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, qk_norm=cfg.qk_norm,
+            with_bias=cfg.attn_bias)
+    elif spec.mixer == "mamba":
+        p["mixer"] = SSM.init_mamba(ks[1], cfg.d_model)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = SSM.init_mlstm(ks[1], cfg.d_model, cfg.n_heads)
+    elif spec.mixer == "slstm":
+        p["mixer"] = SSM.init_slstm(ks[1], cfg.d_model, cfg.n_heads)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "mlp":
+        p["norm2"] = L.init_norm(ks[2], cfg.d_model)
+        p["ffn"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                              gated=cfg.mlp_gated)
+    elif spec.ffn == "moe":
+        m = cfg.moe
+        p["norm2"] = L.init_norm(ks[2], cfg.d_model)
+        p["ffn"] = MOE.init_moe(ks[3], cfg.d_model, m.d_expert, m.n_experts,
+                                m.n_shared)
+    return p
+
+
+def block_cache(cfg: ArchConfig, spec: LayerSpec, b: int, max_len: int,
+                dtype):
+    if spec.mixer == "attn":
+        return L.AttnCache.zeros(b, cfg.n_kv_heads, max_len,
+                                 cfg.resolved_head_dim, dtype)
+    if spec.mixer == "mamba":
+        return SSM.mamba_cache(b, cfg.d_model, dtype)
+    if spec.mixer == "mlstm":
+        return SSM.mlstm_cache(b, cfg.d_model, cfg.n_heads)
+    if spec.mixer == "slstm":
+        return SSM.slstm_cache(b, cfg.d_model, cfg.n_heads)
+    raise ValueError(spec.mixer)
+
+
+def apply_block(p: Params, x: Array, cfg: ArchConfig, run: RunConfig,
+                spec: LayerSpec, *, policy: SoftmaxPolicy, cache=None,
+                collector=None):
+    h = L.apply_norm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        mixed, new_cache = L.apply_attention(
+            p["mixer"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, causal=True, qk_norm=cfg.qk_norm,
+            norm_eps=cfg.norm_eps,
+            rope_theta=cfg.rope_theta if cfg.rope else None,
+            policy=policy, backend=run.attention_backend, cache=cache,
+            collector=collector, q_chunk=run.q_chunk, k_chunk=run.k_chunk,
+            unroll=run.probe_unroll)
+    elif spec.mixer == "mamba":
+        mixed, new_cache = SSM.apply_mamba(p["mixer"], h, chunk=run.ssm_chunk,
+                                           cache=cache, remat=run.remat,
+                                           unroll=run.probe_unroll)
+    elif spec.mixer == "mlstm":
+        mixed, new_cache = SSM.apply_mlstm(p["mixer"], h, n_heads=cfg.n_heads,
+                                           chunk=run.ssm_chunk, cache=cache,
+                                           remat=run.remat)
+    else:  # slstm
+        mixed, new_cache = SSM.apply_slstm(p["mixer"], h, n_heads=cfg.n_heads,
+                                           chunk=run.ssm_chunk, cache=cache,
+                                           remat=run.remat)
+    x = x + mixed
+
+    aux = {}
+    if spec.ffn == "mlp":
+        h2 = L.apply_norm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(p["ffn"], h2)
+    elif spec.ffn == "moe":
+        h2 = L.apply_norm(p["norm2"], x, cfg.norm_eps)
+        y, aux = MOE.apply_moe(
+            p["ffn"], h2, n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+            router_policy=run.router_policy)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_periods)
+    period_params = []
+    for pi in range(cfg.n_periods):
+        pk = jax.random.split(ks[4 + pi], len(cfg.period))
+        period_params.append(
+            [init_block(pk[i], cfg, spec)
+             for i, spec in enumerate(cfg.period)])
+    # stack across periods: leading axis n_periods on every leaf
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=0), *period_params)
+    p = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "periods": stacked,
+        "final_norm": L.init_norm(ks[1], cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_lm_head(ks[2], cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def init_caches(cfg: ArchConfig, b: int, max_len: int, dtype):
+    """Stacked (periods-leading) cache pytree."""
+    per_period = [
+        tuple(block_cache(cfg, spec, b, max_len, dtype)
+              for spec in cfg.period)
+        for _ in range(cfg.n_periods)
+    ]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *per_period)
+
+
+def _apply_stack(params: Params, x: Array, cfg: ArchConfig, run: RunConfig,
+                 *, policy: SoftmaxPolicy, caches=None, collector=None):
+    """Run all periods; returns (x, new_caches, aux_sums)."""
+    from repro.runtime import partitioning as PT
+    x = PT.constrain_batch_major(x)  # no-op without an active mesh
+    use_cache = caches is not None
+
+    def period_fn(x, period_p, period_cache):
+        new_caches = []
+        aux_sum = {"load_balance_loss": jnp.zeros((), jnp.float32)}
+        for i, spec in enumerate(cfg.period):
+            c = period_cache[i] if use_cache else None
+            x, nc, aux = apply_block(period_p[i], x, cfg, run, spec,
+                                     policy=policy, cache=c,
+                                     collector=collector)
+            new_caches.append(nc if nc is not None else c)
+            if "load_balance_loss" in aux:
+                aux_sum["load_balance_loss"] += aux["load_balance_loss"]
+        return x, (tuple(new_caches) if use_cache else None), aux_sum
+
+    if run.scan_layers and collector is None:
+        def body(carry, xs):
+            x = carry
+            if use_cache:
+                pp, cc = xs
+                x, ncs, aux = period_fn(x, pp, cc)
+                return x, (ncs, aux)
+            pp = xs
+            x, _, aux = period_fn(x, pp, None)
+            return x, aux
+
+        if run.remat:
+            body = jax.checkpoint(body)
+        xs = (params["periods"], caches) if use_cache else params["periods"]
+        x, ys = jax.lax.scan(body, x, xs)
+        if use_cache:
+            new_caches, aux_stack = ys
+        else:
+            new_caches, aux_stack = None, ys
+        aux = {k: jnp.sum(v) for k, v in aux_stack.items()}
+        return x, new_caches, aux
+    else:
+        # unrolled (probes / tiny models / calibration passes) — remat per
+        # period here too, so probe HLO includes the same recompute the
+        # scanned program pays (roofline extrapolation stays faithful)
+        pfn = period_fn
+        if run.remat and collector is None:
+            pfn = jax.checkpoint(period_fn, static_argnums=())
+        aux_tot = {"load_balance_loss": jnp.zeros((), jnp.float32)}
+        new_list = []
+        for pi in range(cfg.n_periods):
+            pp = jax.tree_util.tree_map(lambda a, pi=pi: a[pi],
+                                        params["periods"])
+            cc = (jax.tree_util.tree_map(lambda a, pi=pi: a[pi], caches)
+                  if use_cache else None)
+            x, ncs, aux = pfn(x, pp, cc)
+            new_list.append(ncs)
+            for k in aux_tot:
+                aux_tot[k] += aux.get(k, 0.0)
+        new_caches = (jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, 0), *new_list) if use_cache else None)
+        return x, new_caches, aux_tot
+
+
+def _head(params: Params, cfg: ArchConfig, x: Array) -> Array:
+    from repro.runtime import partitioning as PT
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"]["table"].T
+    else:
+        logits = L.apply_lm_head(params["head"], x)
+    return PT.constrain_logits(logits)
+
+
+def _dtype(run: RunConfig):
+    return jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
+
+
+def train_logits(params: Params, tokens: Array, cfg: ArchConfig,
+                 run: RunConfig, collector=None):
+    """(B, S) int32 → (logits (B, S, V) f32, aux).  Exact softmax."""
+    x = L.apply_embedding(params["embed"], tokens, _dtype(run))
+    x, _, aux = _apply_stack(params, x, cfg, run, policy=EXACT,
+                             collector=collector)
+    return _head(params, cfg, x), aux
+
+
+def prefill(params: Params, tokens: Array, cfg: ArchConfig, run: RunConfig,
+            max_len: int, collector=None, logits: str = "all"):
+    """Fill caches for (B, S) prompt; returns (logits, caches).
+
+    ``logits='last'`` applies the LM head to the final position only —
+    serving never materializes the (B, S, V) tensor.
+    """
+    b = tokens.shape[0]
+    caches = init_caches(cfg, b, max_len, _dtype(run))
+    x = L.apply_embedding(params["embed"], tokens, _dtype(run))
+    x, caches, _ = _apply_stack(params, x, cfg, run,
+                                policy=run.softmax_policy, caches=caches,
+                                collector=collector)
+    if logits == "last":
+        x = x[:, -1:]
+    return _head(params, cfg, x), caches
+
+
+def decode_step(params: Params, token: Array, caches, cfg: ArchConfig,
+                run: RunConfig):
+    """One decode step: token (B, 1) + caches → (logits (B, 1, V), caches)."""
+    x = L.apply_embedding(params["embed"], token, _dtype(run))
+    x, caches, _ = _apply_stack(params, x, cfg, run,
+                                policy=run.softmax_policy, caches=caches)
+    return _head(params, cfg, x), caches

@@ -1,0 +1,6 @@
+"""Optimizer substrate: AdamW (+ fp32 master, ZeRO-sharded states),
+LR schedules, int8 gradient compression with error feedback."""
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_update,
+                               clip_by_global_norm, global_norm, init_adamw)
+from repro.optim.schedules import constant, linear_warmup_cosine
+from repro.optim.grad_compress import compress_grads, init_error_feedback

@@ -1,0 +1,51 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor symmetric quantization of gradients before the (implicit)
+data-parallel reduction, with an error-feedback accumulator so the
+quantization residual is re-injected next step — the standard 1-bit-Adam
+/ EF-SGD construction that keeps convergence unbiased.
+
+On a real pod this halves (bf16→int8) or quarters (f32→int8) the
+reduce-scatter bytes on the 'data' axis.  In the SPMD program the psum is
+inserted by XLA, so we model the *numerics* here (quantize → reduce →
+dequantize ≡ reduce of quantized values, since quantization is applied
+pre-reduction on each shard identically); the collective-byte saving is
+accounted analytically in the roofline (§Perf notes).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Q_MAX = 127.0
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: PyTree, ef: PyTree) -> tuple[PyTree, PyTree, dict]:
+    """Returns (dequantized int8 grads, new error feedback, stats)."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e          # re-inject residual
+        scale = jnp.maximum(jnp.max(jnp.abs(g)) / Q_MAX, 1e-12)
+        q = jnp.clip(jnp.round(g / scale), -Q_MAX, Q_MAX)
+        deq = q * scale
+        return deq, g - deq                     # residual → next step
+
+    pairs = jax.tree_util.tree_map(one, grads, ef)
+    deq = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree_util.tree_map(
+        lambda t: jnp.mean(jnp.abs(t[1])), pairs,
+        is_leaf=lambda t: isinstance(t, tuple))
+    mean_resid = jnp.mean(jnp.stack(jax.tree_util.tree_leaves(err)))
+    return deq, new_ef, {"compress_residual": mean_resid}

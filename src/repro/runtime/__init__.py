@@ -1,0 +1,8 @@
+"""Distributed runtime: partitioning rules, train/serve steps, fault
+tolerance, pipeline parallelism."""
+from repro.runtime.train_loop import (TrainState, init_train_state,
+                                      make_eval_step, make_loss_fn,
+                                      make_train_step, cross_entropy)
+from repro.runtime.serve_loop import (generate, make_decode_step,
+                                      make_prefill_step, sample_token)
+from repro.runtime.fault_tolerance import ResilientTrainer, TrainerReport

@@ -1,0 +1,69 @@
+"""Serving loops: prefill + decode steps and a batched generation driver.
+
+This is where the paper's technique is ON: ``run.softmax_policy``
+(exact / REXP / 2D-LUT at any precision) governs every attention softmax
+in prefill and decode.  ``generate`` is the host-side driver (greedy or
+temperature sampling) over the jitted steps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models.model_zoo import Model
+
+Array = jax.Array
+
+
+def make_prefill_step(model: Model, run: RunConfig, max_len: int):
+    def prefill_step(params, tokens, encoder_input=None):
+        logits, state = model.prefill(params, tokens, run, max_len,
+                                      encoder_input=encoder_input,
+                                      logits="last")
+        return logits, state
+    return prefill_step
+
+
+def make_decode_step(model: Model, run: RunConfig):
+    def decode_step(params, token, state):
+        return model.decode_step(params, token, state, run)
+    return decode_step
+
+
+def sample_token(logits: Array, key, temperature: float = 0.0) -> Array:
+    """logits (B, 1, V) → token (B, 1) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits[:, 0] / temperature
+    tok = jax.random.categorical(key, scaled, axis=-1)
+    return tok[:, None].astype(jnp.int32)
+
+
+def generate(model: Model, params, prompt: Array, run: RunConfig, *,
+             max_new_tokens: int, max_len: int | None = None,
+             encoder_input=None, temperature: float = 0.0, seed: int = 0,
+             jit: bool = True):
+    """Greedy/temperature generation.  Returns (B, max_new_tokens) tokens."""
+    b, s = prompt.shape
+    max_len = max_len or (s + max_new_tokens)
+    prefill_step = make_prefill_step(model, run, max_len)
+    decode_step = make_decode_step(model, run)
+    if jit:
+        prefill_step = jax.jit(prefill_step)
+        decode_step = jax.jit(decode_step)
+
+    key = jax.random.PRNGKey(seed)
+    logits, state = prefill_step(params, prompt,
+                                 encoder_input=encoder_input)
+    out = []
+    tok = sample_token(logits, key, temperature)
+    for i in range(max_new_tokens):
+        out.append(tok)
+        if i == max_new_tokens - 1:
+            break
+        key, sub = jax.random.split(key)
+        logits, state = decode_step(params, tok, state)
+        tok = sample_token(logits, sub, temperature)
+    return jnp.concatenate(out, axis=1)

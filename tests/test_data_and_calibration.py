@@ -1,0 +1,99 @@
+"""Data pipeline determinism + Σe^x calibration (paper Fig. 4 machinery)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import (SumCollector, calibrate_from_logits,
+                                    row_exp_sums)
+from repro.core.quantization import (fake_quant_affine, fake_quant_symmetric,
+                                     quantize_params_ptqd)
+from repro.data.synthetic import DataConfig, SyntheticDataset
+
+
+def test_batch_is_pure_function_of_step():
+    cfg = DataConfig(vocab_size=101, seq_len=32, global_batch=8, seed=42)
+    a = SyntheticDataset(cfg)
+    b = SyntheticDataset(cfg)
+    for step in (0, 7, 1234):
+        np.testing.assert_array_equal(a.batch(step), b.batch(step))
+    assert not np.array_equal(a.batch(0), a.batch(1))
+
+
+def test_host_slice_consistent_with_global():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=16, seed=1)
+    ds = SyntheticDataset(cfg)
+    full = ds.batch(5)
+    np.testing.assert_array_equal(full[4:8], ds.batch(5, slice(4, 8)))
+
+
+def test_row_exp_sums_matches_definition(rng):
+    x = jnp.asarray(rng.normal(0, 2, (16, 64)).astype(np.float32))
+    s = row_exp_sums(x)
+    m = jnp.max(x, -1, keepdims=True)
+    want = jnp.sum(jnp.exp(x - m), -1)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want), rtol=1e-6)
+    # max-normalization ⇒ Σ ≥ 1 always (paper's stability argument)
+    assert float(jnp.min(s)) >= 1.0
+
+
+def test_calibration_recommends_reasonable_sizes(rng):
+    batches = [jnp.asarray(rng.normal(0, 1.5, (32, 128)).astype(np.float32))
+               for _ in range(8)]
+    res = calibrate_from_logits(batches)
+    assert res.count == 8 * 32
+    assert 1.0 <= res.p50 <= res.p99 <= res.max
+    # LUT_α must cover the observed p99.9 with headroom
+    assert res.recommend_alpha_len() >= int(res.p999)
+    assert res.recommend_sigma_cols() >= 2
+    assert res.hist_counts.sum() <= res.count
+
+
+def test_collector_cap():
+    c = SumCollector(max_samples=10)
+    for _ in range(5):
+        c.offer(jnp.ones((4, 8)))
+    assert c.result().count == 10
+
+
+def test_peaked_rows_have_small_sums(rng):
+    """Peaked attention (one dominant logit) ⇒ Σ≈1; flat ⇒ Σ≈n — the
+    distribution property that makes small LUT_α viable for NLP."""
+    peaked = jnp.zeros((8, 64)).at[:, 0].set(20.0)
+    flat = jnp.zeros((8, 64))
+    assert float(jnp.max(row_exp_sums(peaked))) < 1.01
+    assert abs(float(jnp.mean(row_exp_sums(flat))) - 64.0) < 1e-3
+
+
+# --- PTQ-D emulation --------------------------------------------------------
+
+
+def test_fake_quant_symmetric_grid(rng):
+    x = jnp.asarray(rng.normal(0, 3, (32, 32)).astype(np.float32))
+    q = fake_quant_symmetric(x)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert len(np.unique(np.round(np.asarray(q) / scale))) <= 255
+    assert float(jnp.max(jnp.abs(q - x))) <= scale / 2 + 1e-7
+
+
+def test_fake_quant_affine_range(rng):
+    x = jnp.asarray(rng.uniform(2.0, 5.0, (64,)).astype(np.float32))
+    q = fake_quant_affine(x)
+    assert float(jnp.max(jnp.abs(q - x))) <= (5.0 - 2.0) / 255.0
+
+
+def test_ptqd_targets_linear_weights_only(rng):
+    params = {
+        "embed": {"table": jnp.asarray(rng.normal(0, 1, (16, 8))
+                                       .astype(np.float32))},
+        "mlp": {"w_up": jnp.asarray(rng.normal(0, 1, (8, 8))
+                                    .astype(np.float32)),
+                "bias": jnp.zeros((8,))},
+    }
+    q = quantize_params_ptqd(params)
+    # embeddings + biases untouched; matmul weights snapped to int8 grid
+    np.testing.assert_array_equal(np.asarray(params["embed"]["table"]),
+                                  np.asarray(q["embed"]["table"]))
+    np.testing.assert_array_equal(np.asarray(params["mlp"]["bias"]),
+                                  np.asarray(q["mlp"]["bias"]))
+    assert not np.array_equal(np.asarray(params["mlp"]["w_up"]),
+                              np.asarray(q["mlp"]["w_up"]))

@@ -1,0 +1,63 @@
+"""Unit tests for the HLO collective parser (roofline third term)."""
+
+from repro.launch.hlo_analysis import parse_collectives
+
+HLO = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %ag = f32[16,16384]{1,0} all-gather(%p0), channel_id=1, replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={1}
+  %ar = f32[16,16384]{1,0} all-reduce(%ag), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = bf16[16,1024]{1,0} reduce-scatter(%ar), channel_id=3, replica_groups={{0,1,2,3}}, dimensions={1}, to_apply=%add
+  %cp = f32[8,8]{1,0} collective-permute(%p0), channel_id=4, source_target_pairs={{0,1},{1,2}}
+  %a2a = f32[4,256]{1,0} all-to-all(%p0), channel_id=5, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %tup = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-reduce(%p0, %p0), channel_id=6, replica_groups={{0,1}}, to_apply=%add
+  ROOT %done = f32[16,1024]{1,0} copy(%rs)
+}
+"""
+
+
+def test_parse_counts_and_types():
+    stats = parse_collectives(HLO)
+    assert stats["all-gather"].count == 1
+    assert stats["all-reduce"].count == 2
+    assert stats["reduce-scatter"].count == 1
+    assert stats["collective-permute"].count == 1
+    assert stats["all-to-all"].count == 1
+    assert stats["total"].count == 6
+
+
+def test_ring_model_wire_bytes():
+    stats = parse_collectives(HLO)
+    ag = 16 * 16384 * 4
+    # all-gather: (n-1)/n × result
+    assert abs(stats["all-gather"].wire_bytes - ag * 15 / 16) < 1
+    # all-reduce (group 16 iota form): 2 × 15/16 × S; plus the 2-group tuple
+    ar = 16 * 16384 * 4
+    tup = 2 * (2 * 2 * 4)
+    want = 2 * (15 / 16) * ar + 2 * (1 / 2) * tup
+    assert abs(stats["all-reduce"].wire_bytes - want) < 1
+    # reduce-scatter: operand = result × group(4), wire (n-1)/n × operand
+    rs = 16 * 1024 * 2
+    assert abs(stats["reduce-scatter"].wire_bytes - (3 / 4) * rs * 4) < 1
+    # permute: full size
+    assert stats["collective-permute"].wire_bytes == 8 * 8 * 4
+
+
+def test_tuple_shapes_summed():
+    stats = parse_collectives(HLO)
+    # the tuple all-reduce contributes both f32[2,2] members
+    assert stats["all-reduce"].tensor_bytes == 16 * 16384 * 4 + 2 * 16
+
+
+def test_non_collective_lines_ignored():
+    stats = parse_collectives("  %x = f32[8]{0} add(%a, %b)\n")
+    assert stats["total"].count == 0
+    assert stats["total"].wire_bytes == 0.0
+
+
+def test_start_variants_counted():
+    txt = ("%ags = f32[4,4]{1,0} all-gather-start(%p), channel_id=9, "
+           "replica_groups={{0,1}}, dimensions={0}\n")
+    stats = parse_collectives(txt)
+    assert stats["all-gather"].count == 1

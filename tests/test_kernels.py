@@ -1,0 +1,197 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/precision sweeps.
+
+Row-softmax kernels must agree BIT-EXACTLY (shared integer semantics).
+Attention kernels: integer-valued q/k inputs make the block dot products
+exact in f32, so the LUT bin indices are deterministic across the blocked
+kernel and the naive oracle; the final f32 contraction is compared with a
+tight allclose (different but valid accumulation order).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_lut2d_tables, build_rexp_tables
+from repro.core.policies import SoftmaxPolicy
+from repro.kernels.lut_softmax.lut_softmax import (lut2d_softmax_pallas,
+                                                   rexp_softmax_pallas)
+from repro.kernels.lut_softmax.ref import lut2d_softmax_ref, rexp_softmax_ref
+from repro.kernels.lut_softmax.ops import lut_softmax
+from repro.kernels.lut_attention.lut_attention import lut_attention_pallas
+from repro.kernels.lut_attention.ops import lut_attention, lut_attention_blocked
+from repro.kernels.lut_attention.ref import lut_attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+PRECISIONS = ["int16", "uint8", "uint4", "uint2"]
+SHAPES = [(4, 64), (3, 5, 200), (17, 333), (1, 8)]
+
+
+def _x(rng, shape, dtype=np.float32, scale=3.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(dtype))
+
+
+def _qkv(rng, b, h, kvh, lq, lk, d, integer=True):
+    def gen(s):
+        if integer:
+            return np.round(rng.normal(0, 2, s)).astype(np.float32)
+        return rng.normal(0, 1, s).astype(np.float32)
+    return (jnp.asarray(gen((b, h, lq, d))),
+            jnp.asarray(gen((b, kvh, lk, d))),
+            jnp.asarray(rng.normal(0, 1, (b, kvh, lk, d))
+                        .astype(np.float32)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("prec", PRECISIONS)
+@pytest.mark.parametrize("lookup", ["select", "gather"])
+def test_rexp_kernel_bit_exact(rng, shape, prec, lookup):
+    x = _x(rng, shape)
+    t = build_rexp_tables(prec)
+    out = rexp_softmax_pallas(x, t, lookup=lookup)
+    ref = rexp_softmax_ref(x, t)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_lut2d_kernel_bit_exact(rng, shape, prec):
+    x = _x(rng, shape)
+    t = build_lut2d_tables(prec)
+    out = lut2d_softmax_pallas(x, t)
+    ref = lut2d_softmax_ref(x, t)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_kernel_input_dtypes(rng, dtype):
+    x = _x(rng, (8, 96), dtype=dtype)
+    t = build_rexp_tables("uint8")
+    out = rexp_softmax_pallas(x, t)
+    ref = rexp_softmax_ref(x, t)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_kernel_masked_rows(rng):
+    x = _x(rng, (8, 128)).at[:, 100:].set(-np.inf)
+    for prec in PRECISIONS:
+        t = build_rexp_tables(prec)
+        np.testing.assert_array_equal(
+            np.asarray(rexp_softmax_pallas(x, t)),
+            np.asarray(rexp_softmax_ref(x, t)))
+
+
+def test_ops_policy_dispatch(rng):
+    x = _x(rng, (4, 64))
+    pol = SoftmaxPolicy(impl="rexp", precision="uint8", use_kernel=True)
+    out = lut_softmax(x, pol)
+    ref = rexp_softmax_ref(x, build_rexp_tables("uint8"))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# --- fused attention --------------------------------------------------------
+
+ATTN_CASES = [
+    (1, 2, 2, 128, 128, 64, False),
+    (2, 4, 2, 100, 260, 32, True),   # GQA + ragged + causal + padding
+    (1, 8, 2, 64, 512, 128, False),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("prec", ["int16", "uint8", "uint4"])
+def test_lut_attention_rexp_vs_oracle(rng, case, prec):
+    b, h, kvh, lq, lk, d, causal = case
+    q, k, v = _qkv(rng, b, h, kvh, lq, lk, d)
+    t = build_rexp_tables(prec)
+    for fused in (False, True):
+        out = lut_attention_pallas(q, k, v, t, method="rexp", causal=causal,
+                                   fused_requant=fused, block_q=64,
+                                   block_k=128)
+        ref = lut_attention_ref(q, k, v, method="rexp", tables=t,
+                                causal=causal, fused_requant=fused)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("prec", ["int16", "uint8", "uint4"])
+def test_lut_attention_lut2d_vs_oracle(rng, case, prec):
+    b, h, kvh, lq, lk, d, causal = case
+    q, k, v = _qkv(rng, b, h, kvh, lq, lk, d)
+    t = build_lut2d_tables(prec)
+    out = lut_attention_pallas(q, k, v, t, method="lut2d", causal=causal,
+                               block_q=64, block_k=128)
+    ref = lut_attention_ref(q, k, v, method="lut2d", tables=t, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lut_attention_continuous_inputs_boundary_flips(rng):
+    """Continuous q/k: ulp-level logit differences may flip LUT bins at
+    boundaries; require < 2% of elements affected."""
+    q, k, v = _qkv(rng, 2, 4, 2, 128, 256, 64, integer=False)
+    t = build_rexp_tables("uint8")
+    out = np.asarray(lut_attention_pallas(q, k, v, t, method="rexp",
+                                          causal=True, block_q=64,
+                                          block_k=128))
+    ref = np.asarray(lut_attention_ref(q, k, v, method="rexp", tables=t,
+                                       causal=True))
+    frac = np.mean(~np.isclose(out, ref, rtol=1e-4, atol=1e-4))
+    assert frac < 0.02
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_exact_kernel(rng, causal):
+    q, k, v = _qkv(rng, 2, 4, 2, 256, 512, 64, integer=False)
+    out, m, l = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                       block_k=128)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_blocked_xla_rexp(rng, causal):
+    q, k, v = _qkv(rng, 2, 4, 2, 256, 512, 64)
+    pol = SoftmaxPolicy(impl="rexp", precision="uint8")
+    blk = lut_attention_blocked(q, k, v, pol, causal=causal, q_chunk=64,
+                                k_chunk=128)
+    ref = lut_attention_ref(q, k, v, method="rexp",
+                            tables=build_rexp_tables("uint8"), causal=causal,
+                            fused_requant=True)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_xla_nondivisible_lengths(rng):
+    """Padding path: 1500-length encoder sequences (whisper)."""
+    q, k, v = _qkv(rng, 1, 4, 4, 300, 1500, 32)
+    pol = SoftmaxPolicy(impl="exact")
+    blk = lut_attention_blocked(q, k, v, pol, causal=False, q_chunk=128,
+                                k_chunk=512)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_traced_kv_len(rng):
+    q, k, v = _qkv(rng, 2, 4, 2, 64, 512, 64)
+    pol = SoftmaxPolicy(impl="rexp", precision="uint8")
+    blk = lut_attention_blocked(q, k, v, pol, kv_len=jnp.int32(300),
+                                q_chunk=64, k_chunk=128)
+    ref = lut_attention_ref(q, k[:, :, :300], v[:, :, :300], method="rexp",
+                            tables=build_rexp_tables("uint8"),
+                            fused_requant=True)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_naive_dispatch_with_kv_len(rng):
+    q, k, v = _qkv(rng, 1, 2, 2, 8, 64, 16)
+    pol = SoftmaxPolicy(impl="rexp", precision="uint8")
+    out = lut_attention(q, k, v, pol, kv_len=jnp.int32(40), backend="naive")
+    ref = lut_attention_ref(q, k[:, :, :40], v[:, :, :40], method="rexp",
+                            tables=build_rexp_tables("uint8"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,79 @@
+"""LUT construction vs the paper's own published tables (Tables 5 and 8)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (build_lut2d_tables, build_lut_alpha, build_lut_exp,
+                        build_lut_recip_exp, build_lut_sigma,
+                        build_rexp_tables, get_precision)
+
+# paper Table 8: LUT_1/e lengths per precision
+RECIP_LEN = {"int16": 13, "uint8": 8, "uint4": 5, "uint2": 3}
+# paper Table 8: LUT_exp lengths
+EXP_LEN = {"int16": 101, "uint8": 101, "uint4": 48, "uint2": 12}
+# paper Table 8: total byte sizes (2D LUT, REXP)
+TOTAL_BYTES = {"int16": (1522, 58), "uint8": (761, 24),
+               "uint4": (367, 21), "uint2": (100, 10)}
+# paper Table 5 (DETR): (alpha_len, int16_total, uint8_total)
+DETR_CASES = [(256, 538, 264), (320, 666, 328), (512, 1050, 520)]
+
+PRECISIONS = list(RECIP_LEN)
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_recip_exp_length_matches_paper(prec):
+    assert build_lut_recip_exp(prec).size == RECIP_LEN[prec]
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_exp_length_matches_paper(prec):
+    assert build_lut_exp(prec).size == EXP_LEN[prec]
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_total_bytes_match_paper_table8(prec):
+    want_2d, want_rexp = TOTAL_BYTES[prec]
+    assert build_lut2d_tables(prec).nbytes == want_2d
+    assert build_rexp_tables(prec).nbytes == want_rexp
+
+
+@pytest.mark.parametrize("alpha_len,want16,want8", DETR_CASES)
+def test_detr_bytes_match_paper_table5(alpha_len, want16, want8):
+    assert build_rexp_tables("int16", alpha_len).nbytes == want16
+    assert build_rexp_tables("uint8", alpha_len).nbytes == want8
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_recip_exp_content(prec):
+    """Eq. (4): LUT[i] = round(e^-i · qmax); monotone non-increasing; LUT[0]=qmax."""
+    p = get_precision(prec)
+    lut = build_lut_recip_exp(prec)
+    assert lut[0] == p.qmax
+    assert lut[-1] == 0
+    assert np.all(np.diff(lut) <= 0)
+    for i, v in enumerate(lut):
+        assert v == int(np.rint(np.exp(-i) * p.qmax))
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_alpha_content(prec):
+    """Eq. (7): LUT_α[j] = round(qmax / j); entry 0 saturates; terminal 0."""
+    p = get_precision(prec)
+    lut = build_lut_alpha(prec)
+    assert lut[0] == p.qmax
+    assert lut[-1] == 0
+    for j in range(1, lut.size - 1):
+        assert lut[j] == int(np.rint(p.qmax / j))
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_sigma_table_shape_and_bounds(prec):
+    p = get_precision(prec)
+    sig = build_lut_sigma(prec)
+    assert sig.shape[0] == 11  # scale_ex = 0.1 ⇒ 11 numerator bins
+    assert sig.min() >= 0 and sig.max() <= p.qmax
+    # row 10 / col j=1 is the saturated σ=1.0 corner
+    assert sig[10, 0] == p.qmax
+    # monotone: increasing numerator ⇒ larger σ; larger Σ ⇒ smaller σ
+    assert np.all(np.diff(sig, axis=0) >= 0)
+    assert np.all(np.diff(sig, axis=1) <= 0)

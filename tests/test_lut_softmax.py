@@ -1,0 +1,157 @@
+"""Numerics of the core LUT softmax (Algorithms 1 & 2) + prior-art gap."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (build_lut2d_tables, build_rexp_tables,
+                        logsoftmax_scoring, softmax_exact, softmax_log_prior,
+                        softmax_lut2d, softmax_rexp, softmax_rexp_unnorm)
+
+PRECISIONS = ["int16", "uint8", "uint4", "uint2"]
+
+
+def _logits(rng, shape=(64, 128), scale=2.0):
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+@pytest.mark.parametrize("method", ["rexp", "lut2d"])
+def test_output_range_and_shape(rng, prec, method):
+    x = _logits(rng)
+    fn = softmax_rexp if method == "rexp" else softmax_lut2d
+    t = (build_rexp_tables(prec) if method == "rexp"
+         else build_lut2d_tables(prec))
+    y = fn(x, t)
+    assert y.shape == x.shape
+    assert float(jnp.min(y)) >= 0.0 and float(jnp.max(y)) <= 1.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("prec,bound", [("int16", 0.12), ("uint8", 0.12),
+                                        ("uint4", 0.25), ("uint2", 0.80)])
+def test_rexp_elementwise_error_bound(rng, prec, bound):
+    """Unit-bin piecewise-constant LUT ⇒ bounded elementwise error.
+
+    The bin width is 1 in logit space, so the numerator is off by at most
+    a factor e^0.5 for round-mode; after α normalization the absolute
+    error stays under ~0.12 for w ≥ 8 (empirically tight) and degrades at
+    uint4/uint2 exactly as the paper's Table 2 trend shows.
+    """
+    x = _logits(rng)
+    err = jnp.abs(softmax_rexp(x, build_rexp_tables(prec))
+                  - softmax_exact(x))
+    assert float(jnp.max(err)) < bound
+
+
+def test_shift_invariance_exact(rng):
+    """σ(x + c) == σ(x) bitwise — max-normalization removes the shift."""
+    x = _logits(rng)
+    t = build_rexp_tables("uint8")
+    np.testing.assert_array_equal(np.asarray(softmax_rexp(x, t)),
+                                  np.asarray(softmax_rexp(x + 37.25, t)))
+    t2 = build_lut2d_tables("uint8")
+    np.testing.assert_array_equal(np.asarray(softmax_lut2d(x, t2)),
+                                  np.asarray(softmax_lut2d(x + 37.25, t2)))
+
+
+def test_row_sums_near_one_uint8_calibrated(rng):
+    """With LUT_α sized for the Σe^x range (paper §5.3), rows ≈ sum to 1."""
+    x = _logits(rng, scale=1.0)  # flat-ish rows: Σe^x up to ~O(cols)
+    t = build_rexp_tables("uint8", alpha_len=160)  # covers the range
+    s = jnp.sum(softmax_rexp(x, t), axis=-1)
+    assert float(jnp.max(jnp.abs(s - 1.0))) < 0.3
+    assert abs(float(jnp.mean(s)) - 1.0) < 0.05
+
+
+def test_alpha_saturation_zeroes_out_of_range_rows(rng):
+    """Paper Fig. 4 lesson, stated as a property: rows whose Σe^x exceeds
+    the LUT_α range hit the terminal 0 entry and collapse — the DETR+DC5
+    failure mode that larger tables fix."""
+    x = jnp.zeros((4, 128))  # perfectly flat: Σe^x = 128 >> x_s = 15
+    t_small = build_rexp_tables("uint8")            # NLP default, 1×16
+    t_big = build_rexp_tables("uint8", alpha_len=160)
+    assert float(jnp.max(jnp.sum(softmax_rexp(x, t_small), -1))) == 0.0
+    s_big = jnp.sum(softmax_rexp(x, t_big), -1)
+    assert abs(float(jnp.mean(s_big)) - 1.0) < 0.1
+
+
+def test_masking_yields_hard_zeros(rng):
+    x = _logits(rng).at[:, 64:].set(-np.inf)
+    for prec in PRECISIONS:
+        y1 = softmax_rexp(x, build_rexp_tables(prec))
+        y2 = softmax_lut2d(x, build_lut2d_tables(prec))
+        assert bool(jnp.all(y1[:, 64:] == 0)), prec
+        assert bool(jnp.all(y2[:, 64:] == 0)), prec
+        assert bool(jnp.all(jnp.isfinite(y1))) and bool(
+            jnp.all(jnp.isfinite(y2)))
+
+
+def test_fully_masked_row_is_zero_not_nan():
+    x = jnp.full((2, 8), -jnp.inf)
+    y = softmax_rexp(x, build_rexp_tables("uint8"))
+    assert bool(jnp.all(y == 0))
+
+
+def test_axis_argument(rng):
+    x = _logits(rng, (4, 32, 16))
+    t = build_rexp_tables("uint8")
+    y0 = softmax_rexp(x, t, axis=1)
+    y1 = jnp.moveaxis(softmax_rexp(jnp.moveaxis(x, 1, -1), t, axis=-1),
+                      -1, 1)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_gather_vs_onehot_lookup_identical(rng):
+    x = _logits(rng)
+    t = build_rexp_tables("uint8")
+    a = softmax_rexp(x, t, lookup_impl="gather")
+    b = softmax_rexp(x, t, lookup_impl="onehot")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_index_modes_differ_but_both_valid(rng):
+    x = _logits(rng)
+    t = build_rexp_tables("uint8")
+    ex = softmax_exact(x)
+    for mode in ("round", "floor"):
+        err = float(jnp.mean(jnp.abs(softmax_rexp(x, t, index_mode=mode)
+                                     - ex)))
+        assert err < 0.05
+
+
+# --- prior-art gap (paper Table 1 / Appendix A.1) --------------------------
+
+
+def test_unnormalized_rexp_is_just_scaled(rng):
+    """[29]: σ* rows do NOT sum to 1 — the failure REXP's α fixes."""
+    x = _logits(rng)
+    t = build_rexp_tables("uint8")
+    s_un = jnp.sum(softmax_rexp_unnorm(x, t), axis=-1)
+    s_rexp = jnp.sum(softmax_rexp(x, t), axis=-1)
+    # unnormalized sums drift far from 1; α-normalized stay close
+    assert float(jnp.mean(jnp.abs(s_un - 1.0))) > 4 * float(
+        jnp.mean(jnp.abs(s_rexp - 1.0)))
+
+
+def test_rexp_beats_log_prior_at_8bit(rng):
+    """The paper's headline claim at the op level: REXP error is smaller
+    than the Eq.(11)/(12) log-transform prior at equal precision."""
+    x = _logits(rng, scale=3.0)
+    ex = softmax_exact(x)
+    e_rexp = float(jnp.mean(jnp.abs(
+        softmax_rexp(x, build_rexp_tables("uint8")) - ex)))
+    e_prior = float(jnp.mean(jnp.abs(
+        softmax_log_prior(x, w=3, max_norm=False) - ex)))
+    # Eq.(11) without max-norm at the same HW cost class degrades hard
+    assert e_rexp < e_prior
+
+
+def test_logsoftmax_scoring_preserves_argmax_only(rng):
+    x = _logits(rng)
+    y = logsoftmax_scoring(x)
+    np.testing.assert_array_equal(np.argmax(np.asarray(y), -1),
+                                  np.argmax(np.asarray(x), -1))
+    # but it is NOT a distribution (the paper's point about [35]/[13])
+    assert float(jnp.max(jnp.sum(jnp.exp(y), -1) - 1.0)) < 1e-3
+    assert float(jnp.min(y)) < 0  # log-domain, unusable as σ inside a graph

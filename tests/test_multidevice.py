@@ -1,0 +1,237 @@
+"""Multi-device tests (sharding parity, pipeline, elastic restore, small
+dry-run).  Each runs in a subprocess with --xla_force_host_platform_
+device_count set, so the main pytest process keeps its single real
+device (per the assignment's dry-run isolation rule)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """jit with production partitioning rules on a 4×2 mesh must produce
+    the same numbers as the unsharded program."""
+    run_py(r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import ARCHS, RunConfig
+from repro.models import build_model
+from repro.runtime import partitioning as PT
+from repro.runtime.train_loop import init_train_state, make_train_step
+from repro.data.synthetic import DataConfig, SyntheticDataset
+from repro.launch.mesh import make_host_mesh
+
+arch = ARCHS['deepseek-moe-16b'].scaled_down(d_model=64, n_heads=4,
+                                             vocab=128, n_periods=2)
+model = build_model(arch)
+run = RunConfig(dtype='float32', attention_backend='naive',
+                scan_layers=True, remat=True)
+state = init_train_state(model, jax.random.PRNGKey(0), run)
+batch = {'tokens': jnp.asarray(SyntheticDataset(
+    DataConfig(128, 16, 8, seed=5)).batch(0))}
+step = make_train_step(model, run)
+
+ref_state, ref_m = jax.jit(step)(state, batch)
+
+mesh = make_host_mesh(data=4, model=2)
+PT.set_active_mesh(mesh)
+psh = PT.make_param_shardings(state.params, mesh)
+put = lambda t, sh: jax.tree_util.tree_map(
+    lambda x, s: jax.device_put(x, s), t, sh)
+state_sh = type(state)(params=put(state.params, psh),
+                       opt=type(state.opt)(step=state.opt.step,
+                                           m=put(state.opt.m, PT.make_param_shardings(state.opt.m, mesh)),
+                                           v=put(state.opt.v, PT.make_param_shardings(state.opt.v, mesh))),
+                       ef=None)
+batch_sh = {'tokens': jax.device_put(
+    batch['tokens'], PT.tokens_sharding(mesh, 8))}
+out_state, out_m = jax.jit(step)(state_sh, batch_sh)
+PT.set_active_mesh(None)
+
+np.testing.assert_allclose(float(ref_m['loss']), float(out_m['loss']),
+                           rtol=1e-5)
+for a, b in zip(jax.tree_util.tree_leaves(ref_state.params),
+                jax.tree_util.tree_leaves(out_state.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4,
+                               atol=3e-5)
+print('SHARDED-PARITY-OK')
+""")
+
+
+def test_gpipe_forward_matches_sequential():
+    run_py(r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.runtime.pipeline import gpipe_forward
+
+n_stages, n_micro, mb, d = 4, 6, 3, 16
+mesh = jax.make_mesh((n_stages,), ('pipe',),
+                     axis_types=(AxisType.Auto,))
+key = jax.random.PRNGKey(0)
+ws = jax.random.normal(key, (n_stages, d, d)) * 0.3
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+out = gpipe_forward(stage_fn, ws, x, mesh, axis='pipe')
+
+ref = x
+for s in range(n_stages):
+    ref = jnp.tanh(ref @ ws[s])
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                           atol=1e-6)
+
+# autodiff through the pipeline (PP backward via transposed ppermute)
+def loss(ws):
+    return jnp.sum(gpipe_forward(stage_fn, ws, x, mesh, axis='pipe') ** 2)
+g = jax.grad(loss)(ws)
+def loss_ref(ws):
+    r = x
+    for s in range(n_stages):
+        r = jnp.tanh(r @ ws[s])
+    return jnp.sum(r ** 2)
+g_ref = jax.grad(loss_ref)(ws)
+np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-4,
+                           atol=1e-5)
+print('GPIPE-OK')
+""")
+
+
+def test_elastic_restore_across_mesh_sizes():
+    """Checkpoints are mesh-agnostic: save from an 8-device data-parallel
+    run, restore and continue on 2 devices — bit-identical params."""
+    run_py(r"""
+import os, tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import ARCHS, RunConfig
+from repro.models import build_model
+from repro.runtime import partitioning as PT
+from repro.runtime.train_loop import init_train_state, make_train_step
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import DataConfig, SyntheticDataset
+from repro.launch.mesh import make_host_mesh
+
+arch = ARCHS['qwen3-32b'].scaled_down(d_model=32, n_heads=4, vocab=64,
+                                      n_periods=1)
+model = build_model(arch)
+run = RunConfig(dtype='float32', attention_backend='naive',
+                scan_layers=True)
+state = init_train_state(model, jax.random.PRNGKey(0), run)
+ds = SyntheticDataset(DataConfig(64, 16, 8, seed=9))
+step = make_train_step(model, run)
+batches = lambda s: {'tokens': jnp.asarray(ds.batch(s))}
+
+# 8-way data-parallel segment
+mesh8 = make_host_mesh(data=8, model=1)
+sh8 = PT.make_param_shardings(state.params, mesh8)
+s8 = type(state)(params=jax.tree_util.tree_map(jax.device_put,
+                                               state.params, sh8),
+                 opt=state.opt, ef=None)
+for i in range(3):
+    s8, _ = jax.jit(step)(s8, {'tokens': jax.device_put(
+        batches(i)['tokens'], PT.tokens_sharding(mesh8, 8))})
+
+tmp = tempfile.mkdtemp()
+mgr = CheckpointManager(tmp)
+mgr.save(s8, step=3)
+
+# elastic restart on a 2-device mesh
+mesh2 = make_host_mesh(data=2, model=1)
+restored, start = mgr.restore_latest(state)
+s2 = type(state)(params=jax.tree_util.tree_map(
+    lambda x, s: jax.device_put(x, s), restored.params,
+    PT.make_param_shardings(restored.params, mesh2)),
+    opt=restored.opt, ef=None)
+for i in range(start, 5):
+    s2, _ = jax.jit(step)(s2, {'tokens': jax.device_put(
+        batches(i)['tokens'], PT.tokens_sharding(mesh2, 8))})
+
+# single-device reference
+s1 = state
+for i in range(5):
+    s1, _ = jax.jit(step)(s1, batches(i))
+for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                jax.tree_util.tree_leaves(s2.params)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4,
+                               atol=3e-5)
+print('ELASTIC-OK')
+""")
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-moe-3b-a800m", "train_4k"),
+    ("xlstm-125m", "decode_32k"),
+])
+def test_dryrun_machinery_small_mesh(arch, shape):
+    """build_cell → lower → compile on an 8-device (4,2) mesh; collective
+    parsing returns sane numbers.  (The production 512-device sweep is
+    launch/dryrun.py; this keeps the machinery under CI.)"""
+    run_py(rf"""
+import jax
+from jax.sharding import AxisType
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.hlo_analysis import parse_collectives
+
+mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
+                     axis_types=(AxisType.Auto,) * 3)
+cell = build_cell('{arch}', '{shape}', mesh)
+compiled = lower_cell(cell).compile()
+cost = compiled.cost_analysis()
+assert cost['flops'] > 0
+coll = parse_collectives(compiled.as_text())
+assert coll['total'].count >= 0
+ma = compiled.memory_analysis()
+assert ma.temp_size_in_bytes >= 0
+print('DRYRUN-SMALL-OK', cost['flops'], coll['total'].count)
+""", devices=8)
+
+
+def test_sharded_flash_decode_matches_single_device():
+    """§Perf iteration 7: shard_map decode over a length-sharded KV cache
+    must match the unsharded decode bitwise-closely (exact and REXP)."""
+    run_py(r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.core.policies import SoftmaxPolicy
+from repro.kernels.lut_attention.sharded_decode import lut_decode_sharded
+from repro.kernels.lut_attention.ops import lut_attention
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(AxisType.Auto,) * 2)
+b, h, kvh, L, dh = 4, 6, 3, 64, 16   # kvh=3 does NOT divide model=4
+rng = np.random.default_rng(0)
+q = jnp.asarray(np.round(rng.normal(0, 2, (b, h, 1, dh))).astype(np.float32))
+k = jnp.asarray(np.round(rng.normal(0, 2, (b, kvh, L, dh))).astype(np.float32))
+v = jnp.asarray(rng.normal(0, 1, (b, kvh, L, dh)).astype(np.float32))
+kv_len = jnp.int32(50)
+
+for pol in (SoftmaxPolicy(), SoftmaxPolicy(impl='rexp', precision='uint8')):
+    # oracle = the (single-device) blocked path: the sharded decode
+    # implements the same fused-requant serving semantics
+    ref = lut_attention(q, k, v, pol, causal=False, kv_len=kv_len,
+                        backend='blocked', q_chunk=1, k_chunk=16)
+    ks = jax.device_put(k, NamedSharding(mesh, P('data', None, 'model', None)))
+    vs = jax.device_put(v, NamedSharding(mesh, P('data', None, 'model', None)))
+    qs = jax.device_put(q, NamedSharding(mesh, P('data', None, None, None)))
+    out = jax.jit(lambda a, b_, c: lut_decode_sharded(
+        a, b_, c, pol, kv_len=kv_len, mesh=mesh,
+        batch_axes=('data',)))(qs, ks, vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+print('SHARDED-DECODE-OK')
+""")

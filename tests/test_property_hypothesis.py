@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_lut_recip_exp, build_lut_alpha,
+                        build_rexp_tables, build_lut2d_tables,
+                        fake_quant_symmetric, softmax_exact, softmax_lut2d,
+                        softmax_rexp)
+from repro.data.synthetic import DataConfig, SyntheticDataset
+
+PRECS = ["int16", "uint8", "uint4", "uint2"]
+
+finite_rows = st.lists(
+    st.lists(st.floats(-30, 30, allow_nan=False, width=32),
+             min_size=2, max_size=48),
+    min_size=1, max_size=8,
+).filter(lambda rows: len({len(r) for r in rows}) == 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=finite_rows, prec=st.sampled_from(PRECS))
+def test_rexp_is_bounded_distribution_like(rows, prec):
+    x = jnp.asarray(np.array(rows, dtype=np.float32))
+    y = softmax_rexp(x, build_rexp_tables(prec))
+    assert y.shape == x.shape
+    assert float(jnp.min(y)) >= 0.0
+    assert float(jnp.max(y)) <= 1.0
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(rows=finite_rows, prec=st.sampled_from(PRECS),
+       shift=st.floats(-100, 100, allow_nan=False, width=32))
+def test_shift_invariance_property(rows, prec, shift):
+    """σ(x + c) = σ(x) exactly — the max-normalization invariant."""
+    x = jnp.asarray(np.array(rows, dtype=np.float32))
+    t = build_rexp_tables(prec)
+    np.testing.assert_array_equal(np.asarray(softmax_rexp(x, t)),
+                                  np.asarray(softmax_rexp(x + shift, t)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(rows=finite_rows)
+def test_argmax_preserved_uint8(rows):
+    """The max element always lands in LUT bin 0 ⇒ σ̂ is maximal there."""
+    x = jnp.asarray(np.array(rows, dtype=np.float32))
+    y = np.asarray(softmax_rexp(x, build_rexp_tables("uint8")))
+    xm = np.asarray(x)
+    am = xm.argmax(-1)
+    assert np.all(np.take_along_axis(y, am[..., None], -1)[..., 0]
+                  >= y.max(-1) - 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rows=finite_rows, prec=st.sampled_from(PRECS))
+def test_lut2d_bounded(rows, prec):
+    x = jnp.asarray(np.array(rows, dtype=np.float32))
+    y = softmax_lut2d(x, build_lut2d_tables(prec))
+    assert float(jnp.min(y)) >= 0.0 and float(jnp.max(y)) <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(w_entries=st.sampled_from(PRECS))
+def test_lut_monotonicity(w_entries):
+    lut = build_lut_recip_exp(w_entries)
+    assert np.all(np.diff(lut) <= 0)
+    alpha = build_lut_alpha(w_entries)
+    assert np.all(np.diff(alpha[1:]) <= 0)  # entry 0 is the saturate
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                     min_size=4, max_size=64))
+def test_fake_quant_idempotent(vals):
+    """quantize(quantize(x)) == quantize(x): values already on the grid."""
+    x = jnp.asarray(np.array(vals, dtype=np.float32).reshape(1, -1))
+    q1 = fake_quant_symmetric(x)
+    q2 = fake_quant_symmetric(q1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), step=st.integers(0, 10_000))
+def test_data_pipeline_deterministic(seed, step):
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=4, seed=seed)
+    a = SyntheticDataset(cfg).batch(step)
+    b = SyntheticDataset(cfg).batch(step)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 97
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_markov_structure(seed):
+    """Every transition is a member of the fixed successor set."""
+    cfg = DataConfig(vocab_size=31, seq_len=32, global_batch=2, seed=seed,
+                     branching=4)
+    ds = SyntheticDataset(cfg)
+    batch = ds.batch(0)
+    succ = ds._succ
+    for row in batch:
+        for t in range(1, len(row)):
+            assert row[t] in succ[row[t - 1]]
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=finite_rows)
+def test_rexp_error_never_exceeds_uint2_worstcase(rows):
+    """Even at the coarsest precision the approximation stays within the
+    analytic worst case (one full LUT quantum ≈ 1/3 + bin error)."""
+    x = jnp.asarray(np.array(rows, dtype=np.float32))
+    err = jnp.abs(softmax_rexp(x, build_rexp_tables("uint2"))
+                  - softmax_exact(x))
+    assert float(jnp.max(err)) <= 1.0
