@@ -56,7 +56,8 @@ def measure(cell) -> Terms:
     from repro.launch.hlo_analysis import parse_collectives
     lowered = lower_cell(cell)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis
+    cost = cost_analysis(compiled)
     coll = parse_collectives(compiled.as_text())
     return Terms(
         flops=float(cost.get("flops", 0.0)),

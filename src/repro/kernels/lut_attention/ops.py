@@ -261,6 +261,45 @@ def lut_attention(
                                   fused_requant=fused_requant)
 
 
+def lut_attention_decode_varlen(
+    q: Array, k: Array, v: Array, policy: SoftmaxPolicy, kv_lens: Array, *,
+    scale: float | None = None,
+) -> Array:
+    """Decode attention with a *per-sequence* valid KV length.
+
+    The continuous-batching serving path: every slot in the decode batch
+    sits at its own position, so the tail mask is per-row rather than the
+    single traced ``kv_len`` the lockstep path uses.
+
+    q (B, H, Lq, D) single/few-token queries; k, v (B, KVH, Lk, D) — the
+    block-table-gathered view of the paged KV pool (logical order, junk
+    past ``kv_lens``); kv_lens (B,) int32.  Dense fallback (logits
+    materialized) so it runs identically on CPU CI and TPU; semantics
+    per key are exactly the lockstep ``kv_len`` path's, which keeps
+    continuous-batching output token-identical to ``generate()``.
+    """
+    b, h, lq, d = q.shape
+    kvh, lk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    s = _ref._logits(q, k, scale, causal=False)  # (B, H, Lq, Lk) f32
+    ki = jnp.arange(lk)
+    valid = ki[None, :] < kv_lens[:, None]       # (B, Lk)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    g = h // kvh
+    vx = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    if policy.impl == "exact":
+        p = _core.softmax_exact(s, axis=-1)
+    elif policy.impl == "rexp":
+        p = _core.softmax_rexp(s, _tables_for(policy), axis=-1,
+                               index_mode=policy.index_mode)
+    elif policy.impl == "lut2d":
+        p = _core.softmax_lut2d(s, _tables_for(policy), axis=-1,
+                                index_mode=policy.index_mode)
+    else:
+        raise ValueError(f"unsupported decode policy {policy.impl!r}")
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+
+
 def _naive_with_bias(q, k, v, policy, causal, scale, k_bias, fused_requant,
                      kv_len):
     """Naive path with an additive per-key bias (KV-cache tail masking).

@@ -19,8 +19,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import lut_builder
 from repro.core.lut_softmax import inv_scale

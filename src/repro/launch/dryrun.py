@@ -61,7 +61,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool) -> dict:
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-        cost = compiled.cost_analysis()
+        from repro.compat import cost_analysis
+        cost = cost_analysis(compiled)
         rec.update(
             status="ok",
             lower_s=round(t_lower, 1),

@@ -1,12 +1,17 @@
 """Serving launcher: batched generation with the LUT softmax active.
 
-Loads a checkpoint (or random-inits), prefills a batch of prompts, then
-decodes with the selected softmax policy — the production path for the
-paper's technique.
+Loads a checkpoint (or random-inits), then serves a batch of prompts
+with the selected softmax policy — the production path for the paper's
+technique.  Two drivers:
+
+* ``--engine lockstep``    — fixed-batch ``serve_loop.generate`` (every
+  request shares one prompt length and finishes together);
+* ``--engine continuous``  — the paged-KV continuous-batching engine
+  (mixed prompt/output lengths share the decode batch; default).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b \
       --scale-down 256,8,512 --softmax rexp --precision uint8 \
-      --batch 4 --prompt-len 64 --new-tokens 32
+      --batch 4 --prompt-len 64 --new-tokens 32 --engine continuous
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ from repro.configs import ARCHS, RunConfig, get_arch
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
+from repro.runtime import PagedCacheConfig, ServingEngine
 from repro.runtime.serve_loop import generate
 from repro.runtime.train_loop import init_train_state
 
@@ -40,6 +46,10 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["lockstep", "continuous"])
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=256)
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -65,6 +75,41 @@ def main() -> None:
         if restored:
             params = restored[0].params
             print(f"restored step {restored[1]}")
+
+    engine_ok = (not arch.encoder_layers
+                 and all(s.mixer == "attn" for s in arch.period))
+    use_engine = args.engine == "continuous" and engine_ok
+    if args.engine == "continuous" and not engine_ok:
+        print("continuous engine serves attention-only decoder LMs; "
+              "falling back to lockstep")
+
+    if use_engine:
+        import numpy as np
+        page_size = args.page_size
+        max_total = args.prompt_len + args.new_tokens
+        mp = -(-max_total // page_size)
+        cache = PagedCacheConfig(n_pages=args.n_pages, page_size=page_size,
+                                 max_pages_per_seq=mp)
+        eng = ServingEngine(model, params, run, n_slots=args.batch,
+                            cache=cache)
+        rng = np.random.default_rng(args.seed)
+        # mixed lengths: the workload lockstep cannot batch
+        for b in range(args.batch):
+            plen = max(1, int(rng.integers(args.prompt_len // 2,
+                                           args.prompt_len + 1)))
+            eng.add_request(rng.integers(0, arch.vocab_size, size=plen),
+                            args.new_tokens, temperature=args.temperature,
+                            seed=args.seed + b)
+        t0 = time.time()
+        results = eng.run()
+        dt = time.time() - t0
+        toks = eng.stats.tokens
+        print(f"policy={policy.impl}/{policy.precision} continuous-batching: "
+              f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. "
+              f"compile; {eng.stats.steps} decode steps, "
+              f"{eng.stats.preemptions} preemptions)")
+        print("sample token ids:", results[0].tokens[:16].tolist())
+        return
 
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 arch.vocab_size)

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policies import EXACT, SoftmaxPolicy
-from repro.kernels.lut_attention.ops import lut_attention
+from repro.kernels.lut_attention.ops import (lut_attention,
+                                             lut_attention_decode_varlen)
 
 Array = jax.Array
 Params = dict[str, Any]
@@ -141,6 +142,94 @@ class AttnCache:
 jax.tree_util.register_dataclass(AttnCache, ["k", "v", "length"], [])
 
 
+@dataclasses.dataclass
+class PagedAttnCache:
+    """Paged KV storage for continuous-batching decode.
+
+    One physical pool of fixed-size pages is shared by every slot in the
+    decode batch; a per-slot block table maps logical page index →
+    physical page id, and ``lengths`` carries each slot's own write
+    cursor (unlike :class:`AttnCache`, whose single scalar forces the
+    whole batch into lockstep).
+
+    Physical page 0 is the reserved **null page**: inactive slots map
+    every logical page to it, so their (masked-out, garbage) decode
+    writes can proceed unconditionally without touching live pages.
+    """
+
+    k_pages: Array       # (n_pages, page_size, KVH, Dh)
+    v_pages: Array
+    block_tables: Array  # (B, max_pages_per_seq) int32 physical page ids
+    lengths: Array       # (B,) int32 — tokens already cached per slot
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[1]
+
+    @staticmethod
+    def zeros(n_pages: int, page_size: int, kvh: int, dh: int, b: int,
+              max_pages_per_seq: int, dtype) -> "PagedAttnCache":
+        return PagedAttnCache(
+            k_pages=jnp.zeros((n_pages, page_size, kvh, dh), dtype),
+            v_pages=jnp.zeros((n_pages, page_size, kvh, dh), dtype),
+            block_tables=jnp.zeros((b, max_pages_per_seq), jnp.int32),
+            lengths=jnp.zeros((b,), jnp.int32),
+        )
+
+
+jax.tree_util.register_dataclass(
+    PagedAttnCache, ["k_pages", "v_pages", "block_tables", "lengths"], [])
+
+
+def gather_pages(pages: Array, block_tables: Array) -> Array:
+    """(P, ps, KVH, Dh) pool + (B, mp) table → (B, KVH, mp·ps, Dh) view.
+
+    Logical token order is preserved: page j of a slot covers absolute
+    positions [j·ps, (j+1)·ps).  Junk past a slot's length (null-page
+    content, partial-page tails) is masked by the caller via ``lengths``.
+    """
+    b, mp = block_tables.shape
+    ps, kvh, dh = pages.shape[1], pages.shape[2], pages.shape[3]
+    g = pages[block_tables]                     # (B, mp, ps, KVH, Dh)
+    return g.transpose(0, 3, 1, 2, 4).reshape(b, kvh, mp * ps, dh)
+
+
+def _paged_decode(p: Params, x: Array, cache: PagedAttnCache, *,
+                  n_heads: int, n_kv_heads: int, head_dim: int,
+                  qk_norm: bool, norm_eps: float, rope_theta: float | None,
+                  policy: SoftmaxPolicy):
+    """Single-token decode against the paged pool (gather-from-block-table).
+
+    Appends the token's KV at ``lengths`` (per slot), then attends to the
+    gathered view with a per-slot valid length — the numerics per valid
+    key are identical to the contiguous-cache decode path.
+    """
+    b, l, _ = x.shape
+    positions = cache.lengths[:, None]  # (B, 1) absolute positions
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, qk_norm,
+                           norm_eps, rope_theta, positions)
+    ps = cache.page_size
+    page_idx = cache.lengths // ps
+    offs = cache.lengths % ps
+    phys = jnp.take_along_axis(cache.block_tables, page_idx[:, None],
+                               axis=1)[:, 0]               # (B,)
+    k_tok = k[:, :, 0].astype(cache.k_pages.dtype)         # (B, KVH, Dh)
+    v_tok = v[:, :, 0].astype(cache.v_pages.dtype)
+    # inactive slots all target the null page; duplicate scatter indices
+    # there are harmless (the page is garbage by definition)
+    k_pages = cache.k_pages.at[phys, offs].set(k_tok)
+    v_pages = cache.v_pages.at[phys, offs].set(v_tok)
+
+    k_seq = gather_pages(k_pages, cache.block_tables)
+    v_seq = gather_pages(v_pages, cache.block_tables)
+    out = lut_attention_decode_varlen(q, k_seq, v_seq, policy,
+                                      kv_lens=cache.lengths + 1)
+    new_cache = PagedAttnCache(k_pages=k_pages, v_pages=v_pages,
+                               block_tables=cache.block_tables,
+                               lengths=cache.lengths + 1)
+    return out, new_cache
+
+
 def _project_qkv(p: Params, x: Array, n_heads: int, n_kv_heads: int,
                  head_dim: int, qk_norm: bool, norm_eps: float,
                  rope_theta: float | None, positions: Array):
@@ -191,6 +280,17 @@ def apply_attention(
                               cache[:length+1] (traced kv_len).
     """
     b, l, _ = x.shape
+    if isinstance(cache, PagedAttnCache):
+        if l != 1:
+            raise ValueError("paged KV cache is decode-only (single token); "
+                             "prefill goes through the contiguous cache")
+        if kv_x is not None or precomputed_kv is not None:
+            raise ValueError("paged KV cache supports self-attention only")
+        out, new_cache = _paged_decode(
+            p, x, cache, n_heads=n_heads, n_kv_heads=n_kv_heads,
+            head_dim=head_dim, qk_norm=qk_norm, norm_eps=norm_eps,
+            rope_theta=rope_theta, policy=policy)
+        return _out_projection(p, x, out, b, l), new_cache
     if positions is None:
         base = cache.length if cache is not None else 0
         positions = base + jnp.arange(l, dtype=jnp.int32)[None, :]
@@ -254,11 +354,16 @@ def apply_attention(
         out = lut_attention(q, k, v, policy, causal=causal and not is_cross,
                             kv_len=kv_len, backend=backend,
                             q_chunk=q_chunk, k_chunk=k_chunk, unroll=unroll)
+    return _out_projection(p, x, out, b, l), new_cache
+
+
+def _out_projection(p: Params, x: Array, out: Array, b: int, l: int) -> Array:
+    """(B, H, L, Dh) attention output → (B, L, D) through wo (+bo)."""
     out = out.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, l, -1)
     out = out @ p["wo"].astype(x.dtype)
     if "bo" in p:
         out = out + p["bo"].astype(x.dtype)
-    return out, new_cache
+    return out
 
 
 def cross_attention_kv(p: Params, src: Array, *, n_kv_heads: int,

@@ -52,6 +52,26 @@ class Model:
             return ED.decode_step(params, token, state, self.cfg, run)
         return TF.decode_step(params, token, state, self.cfg, run)
 
+    def init_paged_pools(self, n_pages: int, page_size: int, run: RunConfig):
+        """Per-layer paged KV pools for continuous-batching decode."""
+        import jax.numpy as jnp
+        if self.is_encdec:
+            raise NotImplementedError("paged decode: decoder-only LMs")
+        dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
+        return TF.init_paged_pools(self.cfg, n_pages, page_size, dtype)
+
+    def decode_step_paged(self, params, token, pools, block_tables, lengths,
+                          run: RunConfig):
+        """One decode step against paged pools (per-slot lengths)."""
+        if self.is_encdec:
+            raise NotImplementedError("paged decode: decoder-only LMs")
+        return TF.decode_step_paged(params, token, pools, block_tables,
+                                    lengths, self.cfg, run)
+
+    def write_prefill_pages(self, pools, caches, page_ids, page_size: int):
+        """Scatter one sequence's prefilled cache into the paged pools."""
+        return TF.write_prefill_pages(pools, caches, page_ids, page_size)
+
     def decode_state_struct(self, b: int, max_len: int, run: RunConfig):
         """Abstract (ShapeDtypeStruct) serving state — no allocation."""
         import jax.numpy as jnp

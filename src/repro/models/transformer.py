@@ -269,3 +269,81 @@ def decode_step(params: Params, token: Array, caches, cfg: ArchConfig,
     x, caches, _ = _apply_stack(params, x, cfg, run,
                                 policy=run.softmax_policy, caches=caches)
     return _head(params, cfg, x), caches
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def check_paged_supported(cfg: ArchConfig) -> None:
+    """Paged decode covers pure-attention decoders (the serving targets)."""
+    bad = [s.mixer for s in cfg.period if s.mixer != "attn"]
+    if bad:
+        raise NotImplementedError(
+            f"paged KV decode requires attention-only mixers, got {bad}")
+
+
+def init_paged_pools(cfg: ArchConfig, n_pages: int, page_size: int, dtype):
+    """Per-layer paged KV pools, periods-stacked like :func:`init_caches`.
+
+    Page 0 of every pool is the reserved null page (see
+    :class:`repro.models.layers.PagedAttnCache`).
+    """
+    check_paged_supported(cfg)
+    shape = (cfg.n_periods, n_pages, page_size, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    return tuple({"k_pages": jnp.zeros(shape, dtype),
+                  "v_pages": jnp.zeros(shape, dtype)}
+                 for _ in cfg.period)
+
+
+def decode_step_paged(params: Params, token: Array, pools, block_tables,
+                      lengths, cfg: ArchConfig, run: RunConfig):
+    """One continuous-batching decode step against the paged pools.
+
+    token (B, 1) int32; block_tables (B, mp) int32; lengths (B,) int32 —
+    tokens already cached per slot (the block table and cursor are shared
+    by every layer; the pools are per-layer).  Returns
+    (logits (B, 1, V), new_pools).
+    """
+    npd = cfg.n_periods
+    bt = jnp.broadcast_to(block_tables, (npd,) + block_tables.shape)
+    ln = jnp.broadcast_to(lengths, (npd,) + lengths.shape)
+    caches = tuple(
+        L.PagedAttnCache(k_pages=pool["k_pages"], v_pages=pool["v_pages"],
+                         block_tables=bt, lengths=ln)
+        for pool in pools)
+    x = L.apply_embedding(params["embed"], token, _dtype(run))
+    x, new_caches, _ = _apply_stack(params, x, cfg, run,
+                                    policy=run.softmax_policy, caches=caches)
+    new_pools = tuple({"k_pages": c.k_pages, "v_pages": c.v_pages}
+                      for c in new_caches)
+    return _head(params, cfg, x), new_pools
+
+
+def write_prefill_pages(pools, caches, page_ids, page_size: int):
+    """Scatter a prefilled contiguous cache into the paged pools.
+
+    ``caches`` is the periods-stacked :class:`AttnCache` pytree returned
+    by :func:`prefill` for ONE sequence (batch 1) whose ``max_len`` is a
+    multiple of ``page_size``; ``page_ids`` (max_len // page_size,) int32
+    gives the physical destination of each logical page.  Entries past
+    the sequence's real page count point at the null page (id 0), so the
+    cache tail lands in garbage space by construction.
+    """
+    new_pools = []
+    for pool, c in zip(pools, caches):
+        npd, b, kvh, max_len, dh = c.k.shape
+        mp = max_len // page_size
+        def chunks(a):
+            # (npd, 1, KVH, L, Dh) → (npd, mp, ps, KVH, Dh)
+            a = a[:, 0].transpose(0, 2, 1, 3)
+            return a.reshape(npd, mp, page_size, kvh, dh)
+        new_pools.append({
+            "k_pages": pool["k_pages"].at[:, page_ids].set(
+                chunks(c.k).astype(pool["k_pages"].dtype)),
+            "v_pages": pool["v_pages"].at[:, page_ids].set(
+                chunks(c.v).astype(pool["v_pages"].dtype)),
+        })
+    return tuple(new_pools)

@@ -1,0 +1,216 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+Replaces the lockstep ``serve_loop.generate`` path for mixed workloads:
+requests of *different* prompt lengths and output budgets share one
+fixed-capacity decode batch.  Each step, finished sequences leave, queued
+requests join (prefill-then-decode), and every slot decodes against its
+own block-table view of the shared page pool — no re-jitting, because
+the decode step's shapes (slots × block-table width × pool) are fixed at
+engine construction.
+
+The attention softmax is governed by ``run.softmax_policy`` exactly as
+in the lockstep path (exact / REXP / 2D-LUT at any precision), and the
+decode attention is the dense gather-from-block-table fallback, so the
+engine runs unchanged on CPU-only CI.
+
+Greedy decoding is bit-faithful to ``generate()``: prefill runs the same
+program at ``max_len = max_context``, and the paged decode masks exactly
+the keys the contiguous path masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence as SeqOf
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.models.model_zoo import Model
+from repro.models import transformer as TF
+from repro.runtime.paged_cache import (NULL_PAGE, PagedCacheConfig,
+                                       block_table_row)
+from repro.runtime.scheduler import Request, Scheduler, Sequence
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    request_id: int
+    tokens: np.ndarray           # (n_generated,) int32
+    finish_reason: str           # 'length' | 'eos'
+    n_evictions: int
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0               # decode steps executed
+    prefills: int = 0
+    decode_tokens: int = 0       # useful tokens produced by decode steps
+    prefill_tokens: int = 0      # first tokens (produced by prefill)
+    preemptions: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens(self) -> int:
+        return self.decode_tokens + self.prefill_tokens
+
+
+class ServingEngine:
+    """Fixed-capacity continuous-batching driver.
+
+    Args:
+      model/params/run: as for ``serve_loop.generate``; the arch must be
+        a decoder-only, attention-mixer LM (the serving targets).
+      n_slots: decode-batch capacity (sequences decoding concurrently).
+      cache: page-pool sizing; ``cache.max_context`` bounds
+        ``prompt + max_new_tokens`` of any request.
+      jit: wrap the prefill/write/decode steps in jax.jit.  Prefill
+        retraces per distinct prompt length; decode compiles once.
+    """
+
+    def __init__(self, model: Model, params, run: RunConfig, *,
+                 n_slots: int = 4,
+                 cache: PagedCacheConfig = PagedCacheConfig(),
+                 jit: bool = True):
+        if model.is_encdec:
+            raise NotImplementedError("engine serves decoder-only LMs")
+        TF.check_paged_supported(model.cfg)
+        self.model = model
+        self.params = params
+        self.run_cfg = run
+        self.cache = cache
+        self.n_slots = n_slots
+        self.scheduler = Scheduler(cache, n_slots)
+        self.pools = model.init_paged_pools(cache.n_pages, cache.page_size,
+                                            run)
+        self.stats = EngineStats()
+        self._results: dict[int, GenerationResult] = {}
+        self._next_id = 0
+
+        def prefill_fn(params, prompt):
+            return model.prefill(params, prompt, run, cache.max_context,
+                                 logits="last")
+
+        def write_fn(pools, caches, page_ids):
+            return model.write_prefill_pages(pools, caches, page_ids,
+                                             cache.page_size)
+
+        def decode_fn(params, token, pools, block_tables, lengths):
+            return model.decode_step_paged(params, token, pools,
+                                           block_tables, lengths, run)
+
+        # donate the pools: the old buffers are dead the moment the step
+        # returns, so XLA may scatter the new token in place (a no-op on
+        # CPU, where donation is unimplemented, but the serving intent)
+        self._prefill_fn = jax.jit(prefill_fn) if jit else prefill_fn
+        self._write_fn = (jax.jit(write_fn, donate_argnums=(0,))
+                          if jit else write_fn)
+        self._decode_fn = (jax.jit(decode_fn, donate_argnums=(2,))
+                           if jit else decode_fn)
+
+    # -- public API -------------------------------------------------------
+
+    def add_request(self, prompt, max_new_tokens: int, *,
+                    temperature: float = 0.0, seed: int = 0,
+                    eos_id: int | None = None) -> int:
+        """Queue a request; returns its id."""
+        rid = self._next_id
+        self._next_id += 1
+        self.scheduler.add(Request(
+            id=rid, prompt=tuple(int(t) for t in np.asarray(prompt)),
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            seed=seed, eos_id=eos_id))
+        return rid
+
+    def step(self) -> list[GenerationResult]:
+        """Admit + one decode step.  Returns requests finished this step."""
+        finished: list[Sequence] = []
+        while (seq := self.scheduler.try_admit()) is not None:
+            if self._prefill(seq):
+                finished.append(seq)
+        if self.scheduler.running:
+            self.scheduler.grow_for_decode()
+            self.stats.preemptions = self.scheduler.n_preemptions
+            if self.scheduler.running:
+                finished.extend(self._decode_step())
+        return [self._record(seq) for seq in finished]
+
+    def run(self, requests: SeqOf[tuple] | None = None,
+            ) -> dict[int, GenerationResult]:
+        """Drive queued (plus optionally given) requests to completion.
+
+        ``requests`` items are (prompt, max_new_tokens) pairs or dicts of
+        :meth:`add_request` kwargs.
+        """
+        t0 = time.time()
+        for r in requests or ():
+            if isinstance(r, dict):
+                self.add_request(**r)
+            else:
+                self.add_request(r[0], r[1])
+        out: dict[int, GenerationResult] = {}
+        while self.scheduler.has_work():
+            for res in self.step():
+                out[res.request_id] = res
+        self.stats.wall_s += time.time() - t0
+        return out
+
+    # -- internals --------------------------------------------------------
+
+    def _prefill(self, seq: Sequence) -> bool:
+        """Prefill one admitted sequence; True if it finished immediately."""
+        prompt = jnp.asarray(seq.request.prompt, jnp.int32)[None, :]
+        logits, caches = self._prefill_fn(self.params, prompt)
+        page_ids = block_table_row(seq.pages, self.cache.max_pages_per_seq)
+        self.pools = self._write_fn(self.pools, caches,
+                                    jnp.asarray(page_ids))
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += 1
+        tok = self._sample(seq, np.asarray(logits[0, 0]))
+        return self.scheduler.on_token(seq, tok)
+
+    def _decode_step(self) -> list[Sequence]:
+        """One batched decode step over the running slots."""
+        bt = np.full((self.n_slots, self.cache.max_pages_per_seq),
+                     NULL_PAGE, np.int32)
+        lengths = np.zeros((self.n_slots,), np.int32)
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        running = dict(self.scheduler.running)
+        for slot, seq in running.items():
+            bt[slot] = block_table_row(seq.pages,
+                                       self.cache.max_pages_per_seq)
+            lengths[slot] = seq.total_tokens - 1  # cached so far
+            tokens[slot, 0] = seq.generated[-1]   # token entering the cache
+        logits, self.pools = self._decode_fn(
+            self.params, jnp.asarray(tokens), self.pools,
+            jnp.asarray(bt), jnp.asarray(lengths))
+        logits = np.asarray(logits)  # (n_slots, 1, V)
+        self.stats.steps += 1
+        finished = []
+        for slot, seq in running.items():
+            tok = self._sample(seq, logits[slot, 0])
+            self.stats.decode_tokens += 1
+            if self.scheduler.on_token(seq, tok):
+                finished.append(seq)
+        return finished
+
+    def _sample(self, seq: Sequence, logits_row: np.ndarray) -> int:
+        req = seq.request
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        key = jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                 len(seq.generated))
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits_row) / req.temperature))
+
+    def _record(self, seq: Sequence) -> GenerationResult:
+        res = GenerationResult(
+            request_id=seq.request.id,
+            tokens=np.asarray(seq.generated, np.int32),
+            finish_reason=seq.finish_reason or "length",
+            n_evictions=seq.n_evictions)
+        self._results[seq.request.id] = res
+        return res

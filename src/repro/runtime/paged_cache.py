@@ -1,0 +1,100 @@
+"""Host-side paged-KV bookkeeping for the continuous-batching engine.
+
+The *device* side (pools, block-table gather, scatter-append) lives in
+``repro.models.layers`` / ``repro.models.transformer``; this module owns
+the host-side metadata: which physical pages are free, which belong to
+which sequence, and the block-table rows the device step consumes.
+
+Layout contract (shared with :class:`repro.models.layers.PagedAttnCache`):
+
+* the pool holds ``n_pages`` pages of ``page_size`` tokens each;
+* physical page 0 is the reserved **null page** — never allocated, the
+  target of every unused block-table entry, so inactive slots and
+  padding writes land in garbage space by construction;
+* a sequence of length L owns ``ceil(L / page_size)`` pages; pages are
+  appended one at a time as decode crosses page boundaries and all
+  returned to the free list when the sequence finishes or is evicted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class OutOfPagesError(RuntimeError):
+    """The pool cannot satisfy an allocation (admission must wait)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Sizing of the shared pool and of the per-slot block tables."""
+
+    n_pages: int = 64           # physical pages incl. the null page
+    page_size: int = 16         # tokens per page
+    max_pages_per_seq: int = 8  # block-table width (max context / page_size)
+
+    @property
+    def max_context(self) -> int:
+        return self.max_pages_per_seq * self.page_size
+
+    @property
+    def usable_pages(self) -> int:
+        return self.n_pages - 1  # minus the null page
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+
+class PageAllocator:
+    """FIFO free-list allocator over physical page ids [1, n_pages).
+
+    FIFO (rather than LIFO) keeps page reuse order deterministic and
+    maximally stale, which makes use-after-free bugs loud in tests.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (one is the null page)")
+        self.n_pages = n_pages
+        self._free: deque[int] = deque(range(1, n_pages))
+        self._owned: set[int] = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        """Take ``n`` pages, all-or-nothing.  Raises OutOfPagesError."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise OutOfPagesError(
+                f"need {n} pages, {len(self._free)} free "
+                f"(pool has {self.n_pages - 1} usable)")
+        pages = [self._free.popleft() for _ in range(n)]
+        self._owned.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for pg in pages:
+            if pg == NULL_PAGE:
+                raise ValueError("cannot free the null page")
+            if pg not in self._owned:
+                raise ValueError(f"double free / foreign page: {pg}")
+            self._owned.discard(pg)
+            self._free.append(pg)
+
+
+def block_table_row(pages: list[int], max_pages_per_seq: int) -> np.ndarray:
+    """Block-table row for one sequence; unused entries → null page."""
+    if len(pages) > max_pages_per_seq:
+        raise ValueError(
+            f"{len(pages)} pages exceed block-table width {max_pages_per_seq}")
+    row = np.full((max_pages_per_seq,), NULL_PAGE, np.int32)
+    row[:len(pages)] = pages
+    return row

@@ -1,0 +1,192 @@
+"""Request scheduler for the continuous-batching serving engine.
+
+Pure host-side state machine — no jax.  A request moves through
+
+    WAITING ──admit──▶ RUNNING ──finish──▶ FINISHED
+                 ▲          │
+                 └──evict───┘   (page-pool pressure)
+
+Admission is FIFO with head-of-line blocking: the head request joins as
+soon as a slot is free and its *prefill* pages fit; decode pages are
+appended on demand as a sequence crosses page boundaries.  When the pool
+cannot grow a running sequence, the youngest running sequence is evicted
+(pages freed, generated tokens discarded, re-queued at the head) —
+greedy decoding regenerates the same tokens on re-admission, so eviction
+trades work for memory without changing output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+
+import numpy as np
+
+from repro.runtime.paged_cache import (OutOfPagesError, PageAllocator,
+                                       PagedCacheConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request (the engine's unit of admission)."""
+
+    id: int
+    prompt: tuple[int, ...]          # token ids, length ≥ 1
+    max_new_tokens: int
+    temperature: float = 0.0         # 0 → greedy
+    seed: int = 0                    # sampling stream (temperature > 0)
+    eos_id: int | None = None
+
+
+class SeqState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Sequence:
+    """Scheduler-side state of one request."""
+
+    request: Request
+    state: SeqState = SeqState.WAITING
+    slot: int | None = None
+    pages: list[int] = dataclasses.field(default_factory=list)
+    generated: list[int] = dataclasses.field(default_factory=list)
+    admitted_at: int = -1            # admission order (eviction priority)
+    finish_reason: str | None = None
+    n_evictions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    @property
+    def total_tokens(self) -> int:
+        """Tokens the KV cache must hold before the next decode step."""
+        return self.prompt_len + len(self.generated)
+
+
+class Scheduler:
+    """Admission queue + slot map + page accounting."""
+
+    def __init__(self, cache: PagedCacheConfig, n_slots: int):
+        self.cache = cache
+        self.n_slots = n_slots
+        self.allocator = PageAllocator(cache.n_pages)
+        self.waiting: deque[Sequence] = deque()
+        self.running: dict[int, Sequence] = {}
+        self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() → slot 0 first
+        self._admissions = 0
+        self.n_preemptions = 0
+
+    # -- queue ------------------------------------------------------------
+
+    def add(self, request: Request) -> Sequence:
+        if len(request.prompt) < 1:
+            raise ValueError(f"request {request.id}: empty prompt")
+        if request.max_new_tokens < 1:
+            raise ValueError(f"request {request.id}: max_new_tokens < 1")
+        need = request.max_new_tokens + len(request.prompt)
+        if need > self.cache.max_context:
+            raise ValueError(
+                f"request {request.id}: prompt+max_new = {need} exceeds "
+                f"max context {self.cache.max_context}")
+        if self.cache.pages_for(need) > self.cache.usable_pages:
+            raise ValueError(
+                f"request {request.id}: needs {self.cache.pages_for(need)} "
+                f"pages, pool has {self.cache.usable_pages}")
+        seq = Sequence(request=request)
+        self.waiting.append(seq)
+        return seq
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- admission (join) -------------------------------------------------
+
+    def try_admit(self) -> Sequence | None:
+        """Admit the head request if a slot and its prefill pages fit."""
+        if not self.waiting or not self._free_slots:
+            return None
+        seq = self.waiting[0]
+        try:
+            pages = self.allocator.alloc(
+                self.cache.pages_for(seq.prompt_len))
+        except OutOfPagesError:
+            return None  # head-of-line blocking until pages free up
+        self.waiting.popleft()
+        seq.pages = pages
+        seq.slot = self._free_slots.pop()
+        seq.state = SeqState.RUNNING
+        seq.admitted_at = self._admissions
+        self._admissions += 1
+        self.running[seq.slot] = seq
+        return seq
+
+    # -- decode-time page growth (with eviction) --------------------------
+
+    def grow_for_decode(self) -> tuple[list[Sequence], list[Sequence]]:
+        """Ensure every running sequence owns pages for its next write.
+
+        Returns (grown, evicted).  Grows oldest-first; on pool pressure
+        the *youngest* running sequence is evicted — possibly the very
+        one being grown.  A younger sequence never steals pages from an
+        older one, so the oldest admission progresses monotonically and
+        the engine cannot livelock even when the aggregate working set
+        exceeds the pool.  (The per-request bound in :meth:`add`
+        guarantees a sequence running alone can always grow.)
+        """
+        grown: list[Sequence] = []
+        evicted: list[Sequence] = []
+        for seq in sorted(self.running.values(), key=lambda s: s.admitted_at):
+            if seq.state is not SeqState.RUNNING:
+                continue  # evicted while growing an older sequence
+            need = self.cache.pages_for(seq.total_tokens) - len(seq.pages)
+            while need > 0 and seq.state is SeqState.RUNNING:
+                try:
+                    seq.pages.extend(self.allocator.alloc(need))
+                    grown.append(seq)
+                    need = 0
+                except OutOfPagesError:
+                    victim = max(
+                        (s for s in self.running.values()
+                         if s.state is SeqState.RUNNING),
+                        key=lambda s: s.admitted_at)
+                    self._evict(victim)
+                    evicted.append(victim)
+        return grown, evicted
+
+    def _evict(self, seq: Sequence) -> None:
+        """Free a running sequence and re-queue it at the head."""
+        self.allocator.free(seq.pages)
+        self.running.pop(seq.slot)
+        self._free_slots.append(seq.slot)
+        seq.pages = []
+        seq.generated = []
+        seq.slot = None
+        seq.state = SeqState.WAITING
+        seq.n_evictions += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(seq)
+
+    # -- completion (exit) ------------------------------------------------
+
+    def on_token(self, seq: Sequence, token: int) -> bool:
+        """Record a sampled token; finish + free if the request is done."""
+        seq.generated.append(token)
+        req = seq.request
+        done = (len(seq.generated) >= req.max_new_tokens
+                or (req.eos_id is not None and token == req.eos_id))
+        if done:
+            seq.finish_reason = ("eos" if req.eos_id is not None
+                                 and token == req.eos_id else "length")
+            self.allocator.free(seq.pages)
+            seq.pages = []
+            if seq.slot is not None:
+                self.running.pop(seq.slot)
+                self._free_slots.append(seq.slot)
+                seq.slot = None
+            seq.state = SeqState.FINISHED
+        return done

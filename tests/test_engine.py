@@ -1,0 +1,173 @@
+"""Continuous-batching engine: scheduler state machine, join/evict, and
+end-to-end token equivalence with the lockstep ``generate()`` path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, RunConfig
+from repro.core.policies import SoftmaxPolicy
+from repro.models import build_model
+from repro.runtime import (PagedCacheConfig, Request, Scheduler, SeqState,
+                           ServingEngine)
+from repro.runtime.serve_loop import generate
+
+CACHE = PagedCacheConfig(n_pages=40, page_size=8, max_pages_per_seq=8)
+
+
+def _run_cfg(impl="exact", precision="uint8"):
+    pol = (SoftmaxPolicy(impl=impl, precision=precision)
+           if impl != "exact" else SoftmaxPolicy())
+    return RunConfig(dtype="float32", attention_backend="naive",
+                     scan_layers=True, softmax_policy=pol)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    arch = ARCHS["qwen3-32b"].scaled_down(d_model=64, n_heads=4, vocab=128,
+                                          n_periods=2)
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _mixed_requests(rng, n=6, vocab=128):
+    lens = rng.integers(2, 32, size=n)
+    news = rng.integers(1, 28, size=n)
+    return [(rng.integers(0, vocab, size=int(l)).tolist(), int(m))
+            for l, m in zip(lens, news)]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler state machine (host-only, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_admission_fifo_and_slot_exit():
+    s = Scheduler(PagedCacheConfig(n_pages=20, page_size=4,
+                                   max_pages_per_seq=4), n_slots=2)
+    seqs = [s.add(Request(id=i, prompt=(1, 2, 3), max_new_tokens=2))
+            for i in range(3)]
+    assert s.try_admit() is seqs[0] and seqs[0].slot == 0
+    assert s.try_admit() is seqs[1] and seqs[1].slot == 1
+    assert s.try_admit() is None  # no free slot
+    # finishing 0 releases its slot for 2
+    s.on_token(seqs[0], 7)
+    assert not s.on_token(seqs[1], 7)  # 1 of 2 tokens
+    assert s.on_token(seqs[0], 8)
+    assert seqs[0].state is SeqState.FINISHED and seqs[0].pages == []
+    assert s.try_admit() is seqs[2] and seqs[2].slot == 0
+
+
+def test_scheduler_rejects_oversized_requests():
+    s = Scheduler(PagedCacheConfig(n_pages=4, page_size=4,
+                                   max_pages_per_seq=4), n_slots=1)
+    with pytest.raises(ValueError):
+        s.add(Request(id=0, prompt=(1,) * 20, max_new_tokens=1))  # > ctx
+    with pytest.raises(ValueError):
+        s.add(Request(id=1, prompt=(1, 2), max_new_tokens=15))    # > pool
+    with pytest.raises(ValueError):
+        s.add(Request(id=2, prompt=(), max_new_tokens=2))
+
+
+def test_scheduler_eviction_prefers_youngest_and_requeues_at_head():
+    cfg = PagedCacheConfig(n_pages=5, page_size=4, max_pages_per_seq=4)
+    s = Scheduler(cfg, n_slots=2)
+    a = s.add(Request(id=0, prompt=(1,) * 8, max_new_tokens=8))   # 2 pages
+    b = s.add(Request(id=1, prompt=(1,) * 8, max_new_tokens=8))   # 2 pages
+    assert s.try_admit() is a and s.try_admit() is b  # pool full (4/4)
+    # a crosses a page boundary (8 → 9 tokens) → must evict the younger b
+    a.generated.append(5)
+    grown, evicted = s.grow_for_decode()
+    assert evicted == [b] and b.state is SeqState.WAITING
+    assert b.generated == [] and b.pages == []
+    assert s.waiting[0] is b  # re-queued at the head
+    assert grown == [a] and len(a.pages) == 3
+
+
+def test_scheduler_eos_finish():
+    s = Scheduler(PagedCacheConfig(n_pages=8, page_size=4,
+                                   max_pages_per_seq=4), n_slots=1)
+    seq = s.add(Request(id=0, prompt=(1, 2), max_new_tokens=10, eos_id=42))
+    s.try_admit()
+    assert not s.on_token(seq, 3)
+    assert s.on_token(seq, 42)
+    assert seq.finish_reason == "eos"
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["exact", "rexp"])
+def test_engine_token_identical_to_lockstep(small_lm, impl):
+    """Acceptance: continuous batching over a mixed-length request set is
+    token-identical to lockstep generate() per request."""
+    model, params = small_lm
+    run = _run_cfg(impl)
+    rng = np.random.default_rng(0)
+    reqs = _mixed_requests(rng)
+    eng = ServingEngine(model, params, run, n_slots=3, cache=CACHE)
+    out = eng.run(reqs)
+    assert len(out) == len(reqs)
+    for i, (prompt, m) in enumerate(reqs):
+        ref = np.asarray(generate(
+            model, params, jnp.asarray(prompt, jnp.int32)[None], run,
+            max_new_tokens=m, max_len=CACHE.max_context))[0]
+        np.testing.assert_array_equal(out[i].tokens, ref,
+                                      err_msg=f"request {i} ({impl})")
+
+
+def test_engine_join_evict_under_page_pressure(small_lm):
+    """A pool far smaller than the aggregate working set forces
+    preemptions; output must still match lockstep exactly."""
+    model, params = small_lm
+    run = _run_cfg("exact")
+    cache = PagedCacheConfig(n_pages=10, page_size=8, max_pages_per_seq=8)
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, 128, size=l).tolist(), m)
+            for l, m in [(20, 30), (16, 30), (12, 20), (8, 16)]]
+    eng = ServingEngine(model, params, run, n_slots=3, cache=cache)
+    out = eng.run(reqs)
+    assert eng.stats.preemptions > 0
+    assert eng.scheduler.allocator.n_free == cache.usable_pages  # no leaks
+    for i, (prompt, m) in enumerate(reqs):
+        ref = np.asarray(generate(
+            model, params, jnp.asarray(prompt, jnp.int32)[None], run,
+            max_new_tokens=m, max_len=cache.max_context))[0]
+        np.testing.assert_array_equal(out[i].tokens, ref)
+
+
+def test_engine_eos_and_single_token_requests(small_lm):
+    model, params = small_lm
+    run = _run_cfg("exact")
+    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, 128, size=6).tolist()
+    # discover the greedy continuation, then use its 3rd token as EOS
+    probe = eng.run([(prompt, 8)])
+    eos = int(probe[0].tokens[2])
+    stop_at = int(np.argmax(probe[0].tokens == eos)) + 1  # first occurrence
+    eng2 = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    r_eos = eng2.add_request(prompt, 8, eos_id=eos)
+    r_one = eng2.add_request(prompt, 1)   # finishes at prefill
+    out = eng2.run()
+    assert out[r_eos].finish_reason == "eos"
+    assert len(out[r_eos].tokens) == stop_at and out[r_eos].tokens[-1] == eos
+    assert out[r_one].finish_reason == "length"
+    assert len(out[r_one].tokens) == 1
+    assert out[r_one].tokens[0] == probe[0].tokens[0]
+
+
+def test_engine_no_rejit_across_steps(small_lm):
+    """The decode step compiles once: mixed lengths, joins and exits all
+    reuse the same fixed-shape program."""
+    model, params = small_lm
+    run = _run_cfg("exact")
+    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    rng = np.random.default_rng(3)
+    eng.run(_mixed_requests(rng, n=4))
+    traces = eng._decode_fn._cache_size()
+    assert traces == 1, f"decode retraced {traces} times"

@@ -75,12 +75,11 @@ print('SHARDED-PARITY-OK')
 def test_gpipe_forward_matches_sequential():
     run_py(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.runtime.pipeline import gpipe_forward
 
 n_stages, n_micro, mb, d = 4, 6, 3, 16
-mesh = jax.make_mesh((n_stages,), ('pipe',),
-                     axis_types=(AxisType.Auto,))
+mesh = make_mesh((n_stages,), ('pipe',))
 key = jax.random.PRNGKey(0)
 ws = jax.random.normal(key, (n_stages, d, d)) * 0.3
 
@@ -183,15 +182,14 @@ def test_dryrun_machinery_small_mesh(arch, shape):
     launch/dryrun.py; this keeps the machinery under CI.)"""
     run_py(rf"""
 import jax
-from jax.sharding import AxisType
+from repro.compat import cost_analysis, make_mesh
 from repro.launch.cells import build_cell, lower_cell
 from repro.launch.hlo_analysis import parse_collectives
 
-mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
 cell = build_cell('{arch}', '{shape}', mesh)
 compiled = lower_cell(cell).compile()
-cost = compiled.cost_analysis()
+cost = cost_analysis(compiled)
 assert cost['flops'] > 0
 coll = parse_collectives(compiled.as_text())
 assert coll['total'].count >= 0
@@ -206,13 +204,13 @@ def test_sharded_flash_decode_matches_single_device():
     must match the unsharded decode bitwise-closely (exact and REXP)."""
     run_py(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import make_mesh
 from repro.core.policies import SoftmaxPolicy
 from repro.kernels.lut_attention.sharded_decode import lut_decode_sharded
 from repro.kernels.lut_attention.ops import lut_attention
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ('data', 'model'))
 b, h, kvh, L, dh = 4, 6, 3, 64, 16   # kvh=3 does NOT divide model=4
 rng = np.random.default_rng(0)
 q = jnp.asarray(np.round(rng.normal(0, 2, (b, h, 1, dh))).astype(np.float32))

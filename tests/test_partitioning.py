@@ -5,8 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh
 from repro.configs import ARCHS, RunConfig
 from repro.models import build_model
 from repro.runtime import partitioning as PT
@@ -14,8 +15,7 @@ from repro.runtime import partitioning as PT
 
 def _mesh_abstract(shape=(2, 16, 16), axes=("pod", "data", "model")):
     # AbstractMesh builds specs without devices
-    from jax.sharding import AbstractMesh
-    return AbstractMesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_abstract_mesh(shape, axes)
 
 
 MESH = _mesh_abstract()

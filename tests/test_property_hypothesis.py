@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dependency (requirements-dev)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (build_lut_recip_exp, build_lut_alpha,
                         build_rexp_tables, build_lut2d_tables,

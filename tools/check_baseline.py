@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Baseline ratchet: fail CI when the suite regresses below the record.
+
+Reads a pytest junit XML report and compares against the committed
+``tests/baseline.json``:
+
+* ``passed``            must not drop below the baseline;
+* ``failed + errors``   must not rise above the baseline.
+
+The baseline only ratchets forward: burn down a failure (or add tests),
+re-record with ``--update``, commit — CI then holds the new line.
+
+  PYTHONPATH=src python -m pytest -q --junitxml=junit.xml
+  python tools/check_baseline.py junit.xml
+  python tools/check_baseline.py junit.xml --update   # re-record
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import xml.etree.ElementTree as ET
+
+DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent.parent \
+    / "tests" / "baseline.json"
+
+
+def read_junit(path: str) -> dict:
+    root = ET.parse(path).getroot()
+    suites = [root] if root.tag == "testsuite" \
+        else root.findall("testsuite")
+    tot = {"tests": 0, "failures": 0, "errors": 0, "skipped": 0}
+    for s in suites:
+        for k in tot:
+            tot[k] += int(s.get(k, 0))
+    return {
+        "passed": tot["tests"] - tot["failures"] - tot["errors"]
+        - tot["skipped"],
+        "failed": tot["failures"],
+        "errors": tot["errors"],
+        "skipped": tot["skipped"],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("junit_xml")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--update", action="store_true",
+                    help="re-record the baseline from this report")
+    args = ap.parse_args()
+
+    current = read_junit(args.junit_xml)
+    path = pathlib.Path(args.baseline)
+    if args.update:
+        path.write_text(json.dumps(current, indent=2) + "\n")
+        print(f"baseline updated: {current}")
+        return 0
+
+    baseline = json.loads(path.read_text())
+    print(f"current : {current}")
+    print(f"baseline: {baseline}")
+    bad_now = current["failed"] + current["errors"]
+    bad_base = baseline["failed"] + baseline["errors"]
+    problems = []
+    if current["passed"] < baseline["passed"]:
+        problems.append(
+            f"passed dropped: {current['passed']} < {baseline['passed']}")
+    if bad_now > bad_base:
+        problems.append(
+            f"failures+errors rose: {bad_now} > {bad_base}")
+    if problems:
+        for p in problems:
+            print(f"REGRESSION: {p}", file=sys.stderr)
+        return 1
+    print("baseline ratchet OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
