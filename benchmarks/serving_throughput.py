@@ -4,21 +4,30 @@ The lockstep baseline is ``serve_loop.generate`` driven the only way it
 can be: requests grouped by prompt length (a batch must share one
 length), each batch decoding until its *longest* request finishes.  The
 continuous-batching engine serves the identical request set through the
-paged KV cache, joining/evicting per step.
+paged KV cache, joining/evicting per step — measured twice, once with
+the decode attention forced to the dense gather-from-block-table
+reference (``engine-dense``) and once through the paged-attention
+dispatcher's preferred path (``engine-paged-kernel``: the fused Pallas
+kernel on TPU; off-TPU it resolves to the same dense reference, and
+the JSON records what actually ran).
 
 Under mixed prompt/output lengths the lockstep path burns decode steps
 on (a) stragglers padding out their batch and (b) fragmented batches
-below capacity; the engine keeps every slot busy.  Both paths run the
-same model, softmax policy, and dense decode math on CPU, so the gap is
-pure scheduling.
+below capacity; the engine keeps every slot busy.  All paths produce
+token-identical output, so the gaps are pure scheduling + kernel.
 
-  PYTHONPATH=src python -m benchmarks.serving_throughput [--fast]
+  PYTHONPATH=src python -m benchmarks.serving_throughput [--fast] [--json]
 
 Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py.
+``--json`` additionally sweeps every softmax policy and writes
+``BENCH_serving.json`` (tokens/s per driver per policy) so the perf
+trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
 
@@ -28,9 +37,16 @@ import numpy as np
 
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
+from repro.kernels.lut_attention.ops import resolve_paged_backend
 from repro.models import build_model
 from repro.runtime import PagedCacheConfig, ServingEngine
+from repro.runtime.engine import EngineStats
 from repro.runtime.serve_loop import make_decode_step, make_prefill_step
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_serving.json"
+
+POLICIES = ("exact", "rexp", "lut2d")
 
 
 def make_requests(rng, n, vocab, max_prompt=32, max_new=48):
@@ -83,66 +99,140 @@ def make_lockstep(model, params, run, max_len: int):
     return run_requests
 
 
+def _run_cfg(impl: str, paged_backend: str = "auto") -> RunConfig:
+    policy = (SoftmaxPolicy(impl=impl, precision="uint8")
+              if impl != "exact" else SoftmaxPolicy())
+    return RunConfig(dtype="float32", attention_backend="naive",
+                     scan_layers=True, softmax_policy=policy,
+                     paged_backend=paged_backend)
+
+
+def _warm_engine(model, params, run, cache, n_slots, warm):
+    eng = ServingEngine(model, params, run, n_slots=n_slots, cache=cache)
+    eng.run(warm)
+    return eng
+
+
+def _time_requests(eng, requests):
+    """One timed pass; returns (seconds, results keyed by position)."""
+    eng.stats = EngineStats()
+    t0 = time.time()
+    rids = [eng.add_request(p, m) for p, m in requests]
+    out = eng.run()
+    dt = time.time() - t0
+    return dt, {i: out[rid] for i, rid in enumerate(rids)}
+
+
 def bench(n_requests: int = 24, n_slots: int = 4, seed: int = 0,
           impl: str = "rexp") -> dict:
+    """One policy: lockstep vs engine-dense vs engine-paged-kernel."""
     arch = ARCHS["qwen3-32b"].scaled_down(d_model=64, n_heads=4, vocab=128,
                                           n_periods=2)
     model = build_model(arch)
     params = model.init(jax.random.PRNGKey(0))
-    policy = (SoftmaxPolicy(impl=impl, precision="uint8")
-              if impl != "exact" else SoftmaxPolicy())
-    run = RunConfig(dtype="float32", attention_backend="naive",
-                    scan_layers=True, softmax_policy=policy)
     cache = PagedCacheConfig(n_pages=64, page_size=8, max_pages_per_seq=10)
     rng = np.random.default_rng(seed)
     requests = make_requests(rng, n_requests, arch.vocab_size)
     useful = sum(m for _, m in requests)
-
-    # warm-up: drive BOTH persistent drivers over the same batch/prompt
-    # shapes the timed run will see (max_new=2 reaches prefill + decode),
-    # so every timed program hits the trace cache and the timed section
-    # measures scheduling only
-    from repro.runtime.engine import EngineStats
-    lockstep = make_lockstep(model, params, run, cache.max_context)
-    eng = ServingEngine(model, params, run, n_slots=n_slots, cache=cache)
+    # warm-up shapes: max_new=2 reaches prefill + decode for every prompt
+    # length the timed run will see, so the timed sections hit the trace
+    # cache and measure scheduling/kernels only
     warm = [(p, 2) for p, _ in requests]
+
+    # all three drivers are built+warmed up front, then timed in rounds
+    # with the order rotated per round and the best (min) kept: host-side
+    # drift and cache state otherwise bias whichever driver runs last
+    lockstep = make_lockstep(model, params, _run_cfg(impl),
+                             cache.max_context)
     lockstep(warm, n_slots)
-    eng.run(warm)
-    eng.stats = EngineStats()
+    eng_dense = _warm_engine(model, params,
+                             _run_cfg(impl, paged_backend="dense"),
+                             cache, n_slots, warm)
+    eng_auto = _warm_engine(model, params,
+                            _run_cfg(impl, paged_backend="auto"),
+                            cache, n_slots, warm)
 
-    t0 = time.time()
-    lock_out = lockstep(requests, n_slots)
-    t_lock = time.time() - t0
+    def _time_lockstep():
+        t0 = time.time()
+        out = lockstep(requests, n_slots)
+        return time.time() - t0, out
 
-    t0 = time.time()
-    rids = [eng.add_request(p, m) for p, m in requests]
-    eng_out = eng.run()
-    t_eng = time.time() - t0
+    drivers = {"lock": _time_lockstep,
+               "dense": lambda: _time_requests(eng_dense, requests),
+               "auto": lambda: _time_requests(eng_auto, requests)}
+    best: dict[str, float] = {k: float("inf") for k in drivers}
+    outs: dict[str, dict] = {}
+    order = list(drivers)
+    for r in range(3):
+        for name in order[r:] + order[:r]:
+            dt, outs[name] = drivers[name]()
+            best[name] = min(best[name], dt)
+    t_lock, t_dense, t_auto = best["lock"], best["dense"], best["auto"]
+    lock_out, dense_out, auto_out = outs["lock"], outs["dense"], outs["auto"]
+    auto_stats = eng_auto.stats
 
-    for i, rid in enumerate(rids):  # same tokens, or the comparison is moot
-        np.testing.assert_array_equal(eng_out[rid].tokens, lock_out[i])
+    for i in range(len(requests)):  # same tokens, or the comparison is moot
+        np.testing.assert_array_equal(dense_out[i].tokens, lock_out[i])
+        np.testing.assert_array_equal(auto_out[i].tokens, lock_out[i])
 
     return {
         "useful_tokens": useful,
         "lockstep_s": t_lock,
         "lockstep_tok_s": useful / t_lock,
-        "engine_s": t_eng,
-        "engine_tok_s": useful / t_eng,
-        "speedup": t_lock / t_eng,
-        "engine_decode_steps": eng.stats.steps,
-        "engine_preemptions": eng.stats.preemptions,
+        "engine_dense_s": t_dense,
+        "engine_dense_tok_s": useful / t_dense,
+        "engine_paged_kernel_s": t_auto,
+        "engine_paged_kernel_tok_s": useful / t_auto,
+        "paged_kernel_backend": resolve_paged_backend("auto"),
+        "speedup_vs_lockstep": t_lock / t_auto,
+        "kernel_vs_dense": t_dense / t_auto,
+        "engine_decode_steps": auto_stats.steps,
+        "engine_preemptions": auto_stats.preemptions,
     }
+
+
+def write_json(n_requests: int, n_slots: int, seed: int) -> dict:
+    """Sweep every policy and record tokens/s per driver in
+    ``BENCH_serving.json`` (the cross-PR perf trajectory artifact)."""
+    results = {impl: bench(n_requests=n_requests, n_slots=n_slots,
+                           seed=seed, impl=impl)
+               for impl in POLICIES}
+    doc = {
+        "bench": "serving_throughput",
+        "workload": {"n_requests": n_requests, "n_slots": n_slots,
+                     "seed": seed,
+                     "useful_tokens": results["rexp"]["useful_tokens"]},
+        "backend": jax.default_backend(),
+        "paged_kernel_backend": results["rexp"]["paged_kernel_backend"],
+        "tok_s": {impl: {
+            "lockstep": round(r["lockstep_tok_s"], 1),
+            "engine_dense": round(r["engine_dense_tok_s"], 1),
+            "engine_paged_kernel": round(r["engine_paged_kernel_tok_s"], 1),
+        } for impl, r in results.items()},
+    }
+    JSON_PATH.write_text(json.dumps(doc, indent=2) + "\n")
+    return doc
 
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    r = bench(n_requests=12 if fast else 24)
+    n = 12 if fast else 24
+    if "--json" in sys.argv:
+        doc = write_json(n_requests=n, n_slots=4, seed=0)
+        print(f"wrote {JSON_PATH}")
+        print(json.dumps(doc["tok_s"], indent=2))
+        return
+    r = bench(n_requests=n)
     print("name,us_per_call,derived")
     print(f"serving_lockstep,{r['lockstep_s'] * 1e6:.0f},"
           f"{r['lockstep_tok_s']:.1f} tok/s")
-    print(f"serving_continuous,{r['engine_s'] * 1e6:.0f},"
-          f"{r['engine_tok_s']:.1f} tok/s")
-    print(f"serving_speedup,,{r['speedup']:.2f}x "
+    print(f"serving_engine_dense,{r['engine_dense_s'] * 1e6:.0f},"
+          f"{r['engine_dense_tok_s']:.1f} tok/s")
+    print(f"serving_engine_paged_kernel,{r['engine_paged_kernel_s'] * 1e6:.0f},"
+          f"{r['engine_paged_kernel_tok_s']:.1f} tok/s "
+          f"[{r['paged_kernel_backend']}]")
+    print(f"serving_speedup,,{r['speedup_vs_lockstep']:.2f}x vs lockstep, "
+          f"{r['kernel_vs_dense']:.2f}x vs engine-dense "
           f"({r['useful_tokens']} useful tokens; "
           f"{r['engine_decode_steps']} decode steps; "
           f"{r['engine_preemptions']} preemptions)")

@@ -75,6 +75,51 @@ def kernel_lookup(lut: Array, idx: Array, impl: str) -> Array:
     raise ValueError(f"unknown in-kernel lookup impl {impl!r}")
 
 
+def rexp_sigma(e_int: Array, s_row: Array, lut_alpha: Array, qmax: int,
+               index_mode: str, lookup: str) -> Array:
+    """Faithful Algorithm 1 per-element σ_int (pre-dequant), shared by the
+    blocked-attention and paged-decode pass-3 kernels.
+
+    ``e_int`` (R, C) integer numerators of a tile; ``s_row`` (R,) the
+    *global* integer Σ of each row (f32-exact); returns f32 σ_int values
+    ``round(e·α/qmax)`` ≤ qmax — callers dequantize by 1/qmax.
+    """
+    from repro.core.lut_softmax import inv_scale
+    inv = inv_scale(qmax)
+    n_a = lut_alpha.shape[0]
+    rnd = jnp.round if index_mode == "round" else jnp.floor
+    ja = jnp.clip(rnd(s_row * inv).astype(jnp.int32), 0, n_a - 1)
+    alpha = kernel_lookup(lut_alpha, ja, lookup)  # (R,)
+    return jnp.round((e_int * alpha[:, None]).astype(jnp.float32) * inv)
+
+
+def lut2d_sigma_int(e_int: Array, s_row: Array, lut_sigma: Array, qmax: int,
+                    scale_ex: float, scale_sum: float, index_mode: str) -> Array:
+    """Algorithm 2 per-element σ_int via the 2-D table, shared by the
+    blocked-attention and paged-decode pass-3 kernels.
+
+    Gather-free: the column is selected per row, then the row per
+    element, through unrolled predication (the TPU-native analogue of
+    the paper's MSB wiring).  Returns int32 σ_int ≤ qmax.
+    """
+    from repro.core.lut_softmax import inv_scale
+    n_rows, n_cols = lut_sigma.shape
+    rnd = jnp.round if index_mode == "round" else jnp.floor
+    i_idx = jnp.clip(rnd(e_int.astype(jnp.float32)
+                         * inv_scale(qmax * scale_ex)).astype(jnp.int32),
+                     0, n_rows - 1)
+    j_idx = jnp.clip(rnd(s_row * inv_scale(qmax * scale_sum))
+                     .astype(jnp.int32), 1, n_cols) - 1  # (R,)
+    sel_col = jnp.zeros((e_int.shape[0], n_rows), dtype=jnp.int32)
+    for j in range(n_cols):
+        sel_col = jnp.where(j_idx[:, None] == j, lut_sigma[:, j][None, :],
+                            sel_col)
+    sigma_int = jnp.zeros(e_int.shape, dtype=jnp.int32)
+    for i in range(n_rows):
+        sigma_int = jnp.where(i_idx == i, sel_col[:, i][:, None], sigma_int)
+    return sigma_int
+
+
 def pick_block_rows(n_cols: int, target_bytes: int = 4 * 1024 * 1024,
                     max_rows: int = 1024) -> int:
     """Row-block size so a (rows, n_cols) f32 tile fits ``target_bytes``."""

@@ -36,7 +36,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.lut_builder import Lut2DTables, RexpTables
 from repro.core.lut_softmax import inv_scale
-from repro.kernels.common import kernel_lookup, pad_axis_to, round_up
+from repro.kernels.common import (kernel_lookup, lut2d_sigma_int, pad_axis_to,
+                                  rexp_sigma, round_up)
 
 Array = jax.Array
 
@@ -185,21 +186,16 @@ def _rexp_av_kernel(q_ref, k_ref, v_ref, m_ref, s_ref, lut_re_ref, lut_a_ref,
     m = jnp.where(jnp.isfinite(m), m, 0.0)
     e_int = _rexp_e_int(s, m, lut_re_ref[0, :], index_mode, lookup)
 
-    inv = inv_scale(qmax)
-    n_a = lut_a_ref.shape[1]
-    rnd = jnp.round if index_mode == "round" else jnp.floor
-    ja = jnp.clip(rnd(s_ref[0, 0] * inv).astype(jnp.int32), 0, n_a - 1)
-    alpha = kernel_lookup(lut_a_ref[0, :], ja, lookup)  # (BQ,)
-
     # Faithful Algorithm 1: per-element w-bit σ requantization, THEN ·v.
-    sigma_int = jnp.round((e_int * alpha[:, None]).astype(jnp.float32) * inv)
+    sigma_int = rexp_sigma(e_int, s_ref[0, 0], lut_a_ref[0, :], qmax,
+                           index_mode, lookup)
     v = v_ref[0, 0].astype(jnp.float32)
     o_ref[0, 0] += jax.lax.dot_general(sigma_int, v, (((1,), (0,)), ((), ())),
                                        preferred_element_type=jnp.float32)
 
     @pl.when(kb == nk - 1)
     def _dequant():
-        o_ref[0, 0] *= inv
+        o_ref[0, 0] *= inv_scale(qmax)
 
 
 def _lut2d_av_kernel(q_ref, k_ref, v_ref, m_ref, s_ref, lut_e_ref, lut_s_ref,
@@ -217,22 +213,8 @@ def _lut2d_av_kernel(q_ref, k_ref, v_ref, m_ref, s_ref, lut_e_ref, lut_s_ref,
     m = jnp.where(jnp.isfinite(m), m, 0.0)
     e_int = _lut2d_e_int(s, m, lut_e_ref[0, :], exp_step, index_mode, lookup)
 
-    lut_sig = lut_s_ref[...]  # (n_rows, n_cols)
-    n_rows, n_cols = lut_sig.shape
-    rnd = jnp.round if index_mode == "round" else jnp.floor
-    i_idx = jnp.clip(rnd(e_int.astype(jnp.float32)
-                         * inv_scale(qmax * scale_ex)).astype(jnp.int32),
-                     0, n_rows - 1)
-    j_idx = jnp.clip(rnd(s_ref[0, 0] * inv_scale(qmax * scale_sum))
-                     .astype(jnp.int32), 1, n_cols) - 1  # (BQ,)
-
-    sel_col = jnp.zeros((e_int.shape[0], n_rows), dtype=jnp.int32)
-    for j in range(n_cols):
-        sel_col = jnp.where(j_idx[:, None] == j, lut_sig[:, j][None, :],
-                            sel_col)
-    sigma_int = jnp.zeros_like(e_int)
-    for i in range(n_rows):
-        sigma_int = jnp.where(i_idx == i, sel_col[:, i][:, None], sigma_int)
+    sigma_int = lut2d_sigma_int(e_int, s_ref[0, 0], lut_s_ref[...], qmax,
+                                scale_ex, scale_sum, index_mode)
 
     v = v_ref[0, 0].astype(jnp.float32)
     o_ref[0, 0] += jax.lax.dot_general(

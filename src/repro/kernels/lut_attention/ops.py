@@ -10,6 +10,13 @@ Three execution paths, one semantics:
 * ``naive``   — materialized logits (the oracle).  Used by small models,
   tests, and the roofline probes (XLA's cost_analysis counts loop bodies
   once, so probes must avoid scans — see EXPERIMENTS.md §Methodology).
+
+The continuous-batching serving engine decodes through
+:func:`lut_attention_paged_decode`, which dispatches between the fused
+Pallas paged kernel (TPU — K/V stream straight from the page pool
+through per-slot block tables, no contiguous gather) and the dense
+reference (CPU/GPU, and interpret-mode CI — gather-from-block-table,
+materialized logits).  Both produce the same per-key numerics.
 """
 
 from __future__ import annotations
@@ -25,6 +32,7 @@ from repro.core.policies import SoftmaxPolicy
 from repro.core import lut_softmax as _core
 from repro.kernels.lut_attention import ref as _ref
 from repro.kernels.lut_attention.lut_attention import lut_attention_pallas
+from repro.kernels.lut_attention.paged_decode import paged_decode_attention
 
 Array = jax.Array
 
@@ -261,6 +269,19 @@ def lut_attention(
                                   fused_requant=fused_requant)
 
 
+def _grouped_pv(p: Array, v: Array) -> Array:
+    """σ (B, H, Lq, Lk) × v (B, KVH, Lk, D) → (B, H, Lq, D) without
+    materializing a duplicated (B, H, Lk, D) value tensor: the query-head
+    axis is reshaped into (KVH, G) groups and contracted against the
+    shared KV head directly (GQA reads each value row once)."""
+    b, h, lq, lk = p.shape
+    kvh = v.shape[1]
+    g = h // kvh
+    out = jnp.einsum("bngqk,bnkd->bngqd", p.reshape(b, kvh, g, lq, lk),
+                     v.astype(jnp.float32))
+    return out.reshape(b, h, lq, -1)
+
+
 def lut_attention_decode_varlen(
     q: Array, k: Array, v: Array, policy: SoftmaxPolicy, kv_lens: Array, *,
     scale: float | None = None,
@@ -285,8 +306,6 @@ def lut_attention_decode_varlen(
     ki = jnp.arange(lk)
     valid = ki[None, :] < kv_lens[:, None]       # (B, Lk)
     s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
-    g = h // kvh
-    vx = jnp.repeat(v, g, axis=1).astype(jnp.float32)
     if policy.impl == "exact":
         p = _core.softmax_exact(s, axis=-1)
     elif policy.impl == "rexp":
@@ -297,7 +316,7 @@ def lut_attention_decode_varlen(
                                 index_mode=policy.index_mode)
     else:
         raise ValueError(f"unsupported decode policy {policy.impl!r}")
-    return jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+    return _grouped_pv(p, v)
 
 
 def _naive_with_bias(q, k, v, policy, causal, scale, k_bias, fused_requant,
@@ -317,8 +336,6 @@ def _naive_with_bias(q, k, v, policy, causal, scale, k_bias, fused_requant,
         qi = jnp.arange(lq)[:, None] + (kv_len - lq)
         ki = jnp.arange(lk)[None, :]
         s = jnp.where((ki <= qi)[None, None], s, -jnp.inf)
-    g = h // kvh
-    vx = jnp.repeat(v, g, axis=1).astype(jnp.float32)
     if policy.impl == "exact":
         p = _core.softmax_exact(s, axis=-1)
     elif policy.impl == "rexp":
@@ -327,4 +344,79 @@ def _naive_with_bias(q, k, v, policy, causal, scale, k_bias, fused_requant,
     else:
         t = _tables_for(policy)
         p = _core.softmax_lut2d(s, t, axis=-1, index_mode=policy.index_mode)
-    return jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+    return _grouped_pv(p, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (continuous-batching hot loop)
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pages: Array, block_tables: Array) -> Array:
+    """(P, ps, KVH, Dh) pool + (B, mp) table → (B, KVH, mp·ps, Dh) view.
+
+    Logical token order is preserved: page j of a slot covers absolute
+    positions [j·ps, (j+1)·ps).  Junk past a slot's length (null-page
+    content, partial-page tails) is masked by the caller via ``kv_lens``.
+    This materialized view exists ONLY on the dense fallback path — the
+    Pallas kernel streams pages straight from the pool.
+    """
+    b, mp = block_tables.shape
+    ps, kvh, dh = pages.shape[1], pages.shape[2], pages.shape[3]
+    g = pages[block_tables]                     # (B, mp, ps, KVH, Dh)
+    return g.transpose(0, 3, 1, 2, 4).reshape(b, kvh, mp * ps, dh)
+
+
+def resolve_paged_backend(backend: str = "auto") -> str:
+    """Resolve the paged-decode dispatch knob to an executable path.
+
+    * ``auto``   → ``pallas`` on TPU, ``dense`` elsewhere (the kernel's
+      scalar-prefetch grid spec is Mosaic/TPU-only — GPU serves through
+      the dense reference until a Mosaic-GPU port lands, and CPU CI
+      always does);
+    * ``pallas`` → the fused kernel; off-TPU it runs in interpret mode
+      (``pallas_interpret`` — the CI parity configuration);
+    * ``dense``  → gather-from-block-table reference, everywhere.
+    """
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "dense"
+    if backend == "pallas":
+        return ("pallas" if jax.default_backend() == "tpu"
+                else "pallas_interpret")
+    if backend in ("dense", "pallas_interpret"):
+        return backend
+    raise ValueError(f"unknown paged decode backend {backend!r}")
+
+
+def lut_attention_paged_decode(
+    q: Array,              # (B, H, 1, D) single-token queries
+    k_pages: Array,        # (num_pages, page_size, KVH, D) shared pool
+    v_pages: Array,
+    block_tables: Array,   # (B, max_pages_per_seq) int32
+    kv_lens: Array,        # (B,) int32 — valid keys incl. the new token
+    policy: SoftmaxPolicy,
+    *,
+    scale: float | None = None,
+    backend: str = "auto",  # 'auto' | 'pallas' | 'dense'
+) -> Array:
+    """Decode attention straight off the paged KV pool.
+
+    Dispatches per :func:`resolve_paged_backend`: on TPU the fused
+    Pallas kernel reads K/V through the per-slot block tables (one page
+    per grid step — no contiguous (B, KVH, Lk, D) gather, no logits
+    tensor); elsewhere the dense reference gathers the block-table view and
+    reuses :func:`lut_attention_decode_varlen`.  Per-key numerics are
+    identical across paths (the parity suite pins this), so serving
+    output does not depend on where a slot decodes.
+    """
+    resolved = resolve_paged_backend(backend)
+    if resolved.startswith("pallas"):
+        return paged_decode_attention(
+            q, k_pages, v_pages, block_tables, kv_lens, _tables_for(policy),
+            method=policy.impl, scale=scale, index_mode=policy.index_mode,
+            lookup="gather" if policy.lookup_impl == "gather" else "select",
+            interpret=resolved == "pallas_interpret")
+    k_seq = gather_pages(k_pages, block_tables)
+    v_seq = gather_pages(v_pages, block_tables)
+    return lut_attention_decode_varlen(q, k_seq, v_seq, policy, kv_lens,
+                                       scale=scale)

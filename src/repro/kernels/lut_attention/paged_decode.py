@@ -1,0 +1,309 @@
+"""Fused paged-decode attention: LUT softmax in-kernel over block tables.
+
+The continuous-batching decode hot loop.  Every slot in the decode batch
+holds one single-token query and attends to its own sequence, whose K/V
+live scattered across a shared page pool ``(num_pages, page_size, KVH,
+Dh)``.  The dense fallback first *gathers* each slot's pages into a
+contiguous ``(B, KVH, Lk, D)`` tensor and then materializes full logits
+— exactly the memory traffic the paper's LUT approach exists to avoid.
+This kernel instead streams pages straight out of the pool:
+
+* the innermost grid axis walks a slot's **block table**; the K/V block
+  index maps read the physical page id from a scalar-prefetched table
+  (``pltpu.PrefetchScalarGridSpec``), so each grid step DMAs exactly one
+  page into VMEM — the contiguous per-slot view never exists;
+* a per-slot ``kv_lens`` tail mask (also scalar-prefetched) invalidates
+  the partial last page and every null-page placeholder;
+* GQA is handled by grouping: queries arrive as ``(B, KVH, G, Dh)`` and
+  each (slot, kv-head) grid cell serves all ``G`` query heads of that KV
+  head from one page read.
+
+Why multi-pass (same argument as ``lut_attention.py``): the paper's
+Algorithms 1/2 normalize by the *global* row max and the *global* Σe —
+piecewise-constant tables do not satisfy the online-softmax rescaling
+identity, so the classic single-pass flash-decoding trick would change
+the numerics.  The page axis is swept three times, with the running
+max / Σ accumulated online across page chunks in the output refs (block
+index maps are independent of the page axis, so accumulators stay
+resident across the sequential innermost grid dimension):
+
+  pass 1   row max    m(b,h)   = max_p max(q·K_pᵀ)              [MXU]
+  pass 2   Σ          S(b,h)   = Σ_p Σ(e(s, m))                 [MXU+VPU]
+  pass 3   weighted V out(b,h) = Σ_p w(s, m, S) · V_p           [MXU]
+
+where ``e``/``w`` are the policy's semantics — exact ``exp``/softmax, or
+the integer LUT pipeline (REXP per-element σ_int requantization, 2D-LUT
+σ table read) applied *inside* the kernel via the same binning as
+``core.lut_softmax`` (bit-identical integer pipeline; only the final f32
+V-contraction accumulates page-chunked instead of row-at-once).
+
+Total traffic per step: the live pages once per pass plus O(B·G·Dh)
+accumulators — no O(B·mp·ps·D) gather and no (B, H, Lk) logits tensor in
+HBM.  Validated in interpret mode on CPU; Mosaic lowers the same program
+on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lut_builder import Lut2DTables, RexpTables
+from repro.core.lut_softmax import inv_scale
+from repro.kernels.common import kernel_lookup, lut2d_sigma_int, rexp_sigma
+
+Array = jax.Array
+
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# In-kernel helpers
+# ---------------------------------------------------------------------------
+
+
+def _page_logits(q_ref, k_ref, kl_ref, scale, page_size):
+    """(G, ps) f32 logits of this (slot, kv-head, page) cell, tail-masked.
+
+    Key positions are logical: page ``p`` of a slot covers absolute
+    positions [p·ps, (p+1)·ps); everything at or past ``kv_lens[b]`` —
+    partial-page tails and null-page placeholders — is masked to −inf.
+    """
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, Dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (ps, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    return jnp.where(pos < kl_ref[b], s, NEG_INF)
+
+
+def _e_terms(s, m, lut_main, method, exp_step, index_mode, lookup):
+    """Per-element numerators given the global row max ``m`` (G,).
+
+    exact  → f32 ``exp(s − m)``;
+    rexp   → int  ``LUT_1/e[bin(m − s)]``;
+    lut2d  → int  ``LUT_exp[bin((m − s)/step)]``.
+    Masked (−inf) logits yield hard zeros, never the terminal LUT entry.
+    """
+    finite = jnp.isfinite(s)
+    if method == "exact":
+        return jnp.where(finite, jnp.exp(s - m[:, None]), 0.0)
+    n = lut_main.shape[0]
+    d = m[:, None] - s
+    if method == "lut2d":
+        d = d * inv_scale(exp_step)
+    d = jnp.where(finite, d, float(n - 1))
+    rnd = jnp.round if index_mode == "round" else jnp.floor
+    idx = jnp.clip(rnd(d).astype(jnp.int32), 0, n - 1)
+    return jnp.where(finite, kernel_lookup(lut_main, idx, lookup), 0)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1 — global row max (online across pages)
+# ---------------------------------------------------------------------------
+
+
+def _pg_rowmax_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, *, scale,
+                      page_size):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
+    m_ref[0, 0] = jnp.maximum(m_ref[0, 0], jnp.max(s, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Pass 2 — Σ numerators (online across pages)
+# ---------------------------------------------------------------------------
+
+
+def _pg_sum_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, lut_ref, s_ref, *,
+                   scale, page_size, method, exp_step, index_mode, lookup):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
+    m = m_ref[0, 0]
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = _e_terms(s, m, lut_ref[0, :], method, exp_step, index_mode, lookup)
+    s_ref[0, 0] += jnp.sum(e.astype(jnp.float32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Pass 3 — per-element σ · V (faithful requantization, online across pages)
+# ---------------------------------------------------------------------------
+
+
+def _pg_weight_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, m_ref, s_ref,
+                      lut_main_ref, lut_aux_ref, o_ref, *, scale, page_size,
+                      method, qmax, exp_step, scale_ex, scale_sum, index_mode,
+                      lookup):
+    """Accumulate out += σ(s, m, S) @ V_page with the policy's per-element
+    weights — REXP re-quantizes σ_int per element (Algorithm 1 line 11),
+    2D-LUT reads LUT_σ[i(e), j(S)] (Algorithm 2), exact divides by S."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
+    m = m_ref[0, 0]
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = _e_terms(s, m, lut_main_ref[0, :], method, exp_step, index_mode,
+                 lookup)
+    s_tot = s_ref[0, 0]  # (G,) global Σ from pass 2
+
+    if method == "exact":
+        w = e / jnp.maximum(s_tot, jnp.finfo(jnp.float32).tiny)[:, None]
+    elif method == "rexp":
+        w = rexp_sigma(e, s_tot, lut_aux_ref[0, :], qmax, index_mode,
+                       lookup) * inv_scale(qmax)
+    else:  # lut2d
+        sigma_int = lut2d_sigma_int(e, s_tot, lut_aux_ref[...], qmax,
+                                    scale_ex, scale_sum, index_mode)
+        w = sigma_int.astype(jnp.float32) * inv_scale(qmax)
+
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dh)
+    o_ref[0, 0] += jax.lax.dot_general(
+        w.astype(jnp.float32), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side launcher
+# ---------------------------------------------------------------------------
+
+
+def _pool_spec(page_size, dh):
+    """One physical page per grid step; the page id comes from the
+    scalar-prefetched block table — the paged-pool indirection itself."""
+    return pl.BlockSpec(
+        (1, page_size, 1, dh),
+        lambda b, h, p, bt_ref, kl_ref: (bt_ref[b, p], 0, h, 0))
+
+
+def _lut_spec(arr):
+    nd = arr.ndim
+    return pl.BlockSpec(arr.shape,
+                        lambda b, h, p, bt_ref, kl_ref, _nd=nd: (0,) * _nd)
+
+
+def paged_decode_attention(
+    q: Array,              # (B, H, 1, Dh) single-token queries
+    k_pages: Array,        # (num_pages, page_size, KVH, Dh) shared pool
+    v_pages: Array,
+    block_tables: Array,   # (B, max_pages_per_seq) int32 physical page ids
+    kv_lens: Array,        # (B,) int32 — valid keys incl. the new token
+    tables: RexpTables | Lut2DTables | None = None,
+    *,
+    method: str = "exact",          # 'exact' | 'rexp' | 'lut2d'
+    scale: float | None = None,
+    index_mode: str = "round",
+    lookup: str = "select",
+    interpret: bool | None = None,
+) -> Array:
+    """Fused paged-decode attention; returns (B, H, 1, Dh) f32.
+
+    ``interpret=None`` resolves per backend: compiled (Mosaic) on TPU,
+    interpreter emulation elsewhere — callers never get a silent
+    interpreter run on real hardware, and CPU callers never get a
+    lowering error.
+
+    Numerics match ``ops.lut_attention_decode_varlen`` on the gathered
+    view: identical integer pipeline (bins, e_int, Σ, σ_int); the final
+    f32 V-contraction accumulates per page, so outputs agree to f32
+    roundoff (the parity suite pins the tolerance).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, lq, dh = q.shape
+    assert lq == 1, f"paged decode takes single-token queries, got Lq={lq}"
+    num_pages, page_size, kvh, _ = k_pages.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    mp = block_tables.shape[1]
+    scale = scale if scale is not None else dh ** -0.5
+
+    qg = q[:, :, 0, :].reshape(b, kvh, g, dh)
+    block_tables = block_tables.astype(jnp.int32)
+    kv_lens = kv_lens.astype(jnp.int32)
+
+    q_spec = pl.BlockSpec((1, 1, g, dh),
+                          lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0, 0))
+    kv_spec = _pool_spec(page_size, dh)
+    acc_spec = pl.BlockSpec((1, 1, g),
+                            lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0))
+    o_spec = pl.BlockSpec((1, 1, g, dh),
+                          lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0, 0))
+    grid = (b, kvh, mp)  # page axis innermost → sequential accumulation
+
+    def spec(in_specs, out_specs):
+        return pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=grid,
+            in_specs=in_specs, out_specs=out_specs)
+
+    if method == "rexp":
+        assert isinstance(tables, RexpTables)
+        lut_main = jnp.asarray(tables.lut_recip_exp, jnp.int32)[None, :]
+        lut_aux = jnp.asarray(tables.lut_alpha, jnp.int32)[None, :]
+        exp_step = 1.0
+        qmax, scale_ex, scale_sum = tables.precision.qmax, 0.0, 0.0
+    elif method == "lut2d":
+        assert isinstance(tables, Lut2DTables)
+        lut_main = jnp.asarray(tables.lut_exp, jnp.int32)[None, :]
+        lut_aux = jnp.asarray(tables.lut_sigma, jnp.int32)
+        exp_step = tables.exp_step
+        qmax, scale_ex, scale_sum = (tables.precision.qmax, tables.scale_ex,
+                                     tables.scale_sum)
+    elif method == "exact":
+        # table refs still flow through the pallas_call signature; use a
+        # 1-entry placeholder so the three passes share one code path
+        lut_main = jnp.zeros((1, 1), jnp.int32)
+        lut_aux = jnp.zeros((1, 1), jnp.int32)
+        exp_step = 1.0
+        qmax, scale_ex, scale_sum = 1, 0.0, 0.0
+    else:
+        raise ValueError(f"unsupported paged-decode method {method!r}")
+
+    geom = dict(scale=scale, page_size=page_size)
+
+    # Pass 1: global row max, accumulated online over the page chunks.
+    m = pl.pallas_call(
+        functools.partial(_pg_rowmax_kernel, **geom),
+        grid_spec=spec([q_spec, kv_spec], acc_spec),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        interpret=interpret,
+    )(block_tables, kv_lens, qg, k_pages)
+
+    # Pass 2: global Σ of the policy's numerators.
+    s_sum = pl.pallas_call(
+        functools.partial(_pg_sum_kernel, method=method, exp_step=exp_step,
+                          index_mode=index_mode, lookup=lookup, **geom),
+        grid_spec=spec([q_spec, kv_spec, acc_spec, _lut_spec(lut_main)],
+                       acc_spec),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
+        interpret=interpret,
+    )(block_tables, kv_lens, qg, k_pages, m, lut_main)
+
+    # Pass 3: per-element σ · V, accumulated page by page.
+    out = pl.pallas_call(
+        functools.partial(_pg_weight_kernel, method=method, qmax=qmax,
+                          exp_step=exp_step, scale_ex=scale_ex,
+                          scale_sum=scale_sum, index_mode=index_mode,
+                          lookup=lookup, **geom),
+        grid_spec=spec([q_spec, kv_spec, kv_spec, acc_spec, acc_spec,
+                        _lut_spec(lut_main), _lut_spec(lut_aux)],
+                       o_spec),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), jnp.float32),
+        interpret=interpret,
+    )(block_tables, kv_lens, qg, k_pages, v_pages, m, s_sum, lut_main,
+      lut_aux)
+
+    return out.reshape(b, h, 1, dh)

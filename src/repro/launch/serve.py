@@ -9,6 +9,13 @@ technique.  Two drivers:
 * ``--engine continuous``  — the paged-KV continuous-batching engine
   (mixed prompt/output lengths share the decode batch; default).
 
+``--paged-backend`` selects the continuous engine's decode-attention
+kernel: ``auto`` (default) runs the fused Pallas paged kernel on TPU
+and the dense block-table reference elsewhere (GPU included, until a
+Mosaic-GPU port lands); ``pallas`` forces the kernel (interpret mode
+off-TPU — slow, for validation); ``dense`` forces the reference
+everywhere.  Output tokens are identical across backends.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b \
       --scale-down 256,8,512 --softmax rexp --precision uint8 \
       --batch 4 --prompt-len 64 --new-tokens 32 --engine continuous
@@ -48,6 +55,10 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", default="continuous",
                     choices=["lockstep", "continuous"])
+    ap.add_argument("--paged-backend", default="auto",
+                    choices=["auto", "pallas", "dense"],
+                    help="continuous-engine decode attention: fused Pallas "
+                         "paged kernel vs dense block-table reference")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=256)
     args = ap.parse_args()
@@ -62,7 +73,8 @@ def main() -> None:
     policy = (SoftmaxPolicy(impl=args.softmax, precision=args.precision)
               if args.softmax != "exact" else SoftmaxPolicy())
     run = RunConfig(dtype="float32", attention_backend="naive",
-                    scan_layers=True, softmax_policy=policy, ssm_chunk=32)
+                    scan_layers=True, softmax_policy=policy, ssm_chunk=32,
+                    paged_backend=args.paged_backend)
 
     key = jax.random.PRNGKey(args.seed)
     params = init_train_state(model, key, run).params
@@ -104,7 +116,10 @@ def main() -> None:
         results = eng.run()
         dt = time.time() - t0
         toks = eng.stats.tokens
-        print(f"policy={policy.impl}/{policy.precision} continuous-batching: "
+        from repro.kernels.lut_attention.ops import resolve_paged_backend
+        print(f"policy={policy.impl}/{policy.precision} continuous-batching "
+              f"[decode attention: "
+              f"{resolve_paged_backend(args.paged_backend)}]: "
               f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. "
               f"compile; {eng.stats.steps} decode steps, "
               f"{eng.stats.preemptions} preemptions)")

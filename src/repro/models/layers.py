@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.policies import EXACT, SoftmaxPolicy
 from repro.kernels.lut_attention.ops import (lut_attention,
-                                             lut_attention_decode_varlen)
+                                             lut_attention_paged_decode)
 
 Array = jax.Array
 Params = dict[str, Any]
@@ -181,28 +181,18 @@ jax.tree_util.register_dataclass(
     PagedAttnCache, ["k_pages", "v_pages", "block_tables", "lengths"], [])
 
 
-def gather_pages(pages: Array, block_tables: Array) -> Array:
-    """(P, ps, KVH, Dh) pool + (B, mp) table → (B, KVH, mp·ps, Dh) view.
-
-    Logical token order is preserved: page j of a slot covers absolute
-    positions [j·ps, (j+1)·ps).  Junk past a slot's length (null-page
-    content, partial-page tails) is masked by the caller via ``lengths``.
-    """
-    b, mp = block_tables.shape
-    ps, kvh, dh = pages.shape[1], pages.shape[2], pages.shape[3]
-    g = pages[block_tables]                     # (B, mp, ps, KVH, Dh)
-    return g.transpose(0, 3, 1, 2, 4).reshape(b, kvh, mp * ps, dh)
-
-
 def _paged_decode(p: Params, x: Array, cache: PagedAttnCache, *,
                   n_heads: int, n_kv_heads: int, head_dim: int,
                   qk_norm: bool, norm_eps: float, rope_theta: float | None,
-                  policy: SoftmaxPolicy):
-    """Single-token decode against the paged pool (gather-from-block-table).
+                  policy: SoftmaxPolicy, paged_backend: str = "auto"):
+    """Single-token decode against the paged pool — no contiguous gather.
 
-    Appends the token's KV at ``lengths`` (per slot), then attends to the
-    gathered view with a per-slot valid length — the numerics per valid
-    key are identical to the contiguous-cache decode path.
+    Appends the token's KV at ``lengths`` (per slot), then attends
+    straight off the pool through the per-slot block tables via
+    :func:`repro.kernels.lut_attention.ops.lut_attention_paged_decode`
+    (fused Pallas kernel on TPU; dense block-table reference elsewhere).
+    The numerics per valid key are identical to the contiguous-cache
+    decode path either way.
     """
     b, l, _ = x.shape
     positions = cache.lengths[:, None]  # (B, 1) absolute positions
@@ -220,10 +210,10 @@ def _paged_decode(p: Params, x: Array, cache: PagedAttnCache, *,
     k_pages = cache.k_pages.at[phys, offs].set(k_tok)
     v_pages = cache.v_pages.at[phys, offs].set(v_tok)
 
-    k_seq = gather_pages(k_pages, cache.block_tables)
-    v_seq = gather_pages(v_pages, cache.block_tables)
-    out = lut_attention_decode_varlen(q, k_seq, v_seq, policy,
-                                      kv_lens=cache.lengths + 1)
+    out = lut_attention_paged_decode(q, k_pages, v_pages,
+                                     cache.block_tables,
+                                     kv_lens=cache.lengths + 1,
+                                     policy=policy, backend=paged_backend)
     new_cache = PagedAttnCache(k_pages=k_pages, v_pages=v_pages,
                                block_tables=cache.block_tables,
                                lengths=cache.lengths + 1)
@@ -270,6 +260,7 @@ def apply_attention(
     kv_x: Array | None = None,       # cross-attention source (enc-dec)
     precomputed_kv: tuple[Array, Array] | None = None,  # cached cross KV
     unroll: bool = False,            # unroll blocked-attention chunk loops
+    paged_backend: str = "auto",     # paged decode: 'auto'|'pallas'|'dense'
 ) -> tuple[Array, AttnCache | None]:
     """Self- or cross-attention with pluggable softmax semantics.
 
@@ -289,7 +280,8 @@ def apply_attention(
         out, new_cache = _paged_decode(
             p, x, cache, n_heads=n_heads, n_kv_heads=n_kv_heads,
             head_dim=head_dim, qk_norm=qk_norm, norm_eps=norm_eps,
-            rope_theta=rope_theta, policy=policy)
+            rope_theta=rope_theta, policy=policy,
+            paged_backend=paged_backend)
         return _out_projection(p, x, out, b, l), new_cache
     if positions is None:
         base = cache.length if cache is not None else 0

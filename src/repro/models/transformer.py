@@ -92,7 +92,7 @@ def apply_block(p: Params, x: Array, cfg: ArchConfig, run: RunConfig,
             rope_theta=cfg.rope_theta if cfg.rope else None,
             policy=policy, backend=run.attention_backend, cache=cache,
             collector=collector, q_chunk=run.q_chunk, k_chunk=run.k_chunk,
-            unroll=run.probe_unroll)
+            unroll=run.probe_unroll, paged_backend=run.paged_backend)
     elif spec.mixer == "mamba":
         mixed, new_cache = SSM.apply_mamba(p["mixer"], h, chunk=run.ssm_chunk,
                                            cache=cache, remat=run.remat,
@@ -287,12 +287,16 @@ def check_paged_supported(cfg: ArchConfig) -> None:
 def init_paged_pools(cfg: ArchConfig, n_pages: int, page_size: int, dtype):
     """Per-layer paged KV pools, periods-stacked like :func:`init_caches`.
 
-    Page 0 of every pool is the reserved null page (see
+    Each layer's pool follows the kernel-facing page-major layout
+    (:func:`repro.runtime.paged_cache.pool_shape`); page 0 of every pool
+    is the reserved null page (see
     :class:`repro.models.layers.PagedAttnCache`).
     """
+    from repro.runtime.paged_cache import pool_shape
     check_paged_supported(cfg)
-    shape = (cfg.n_periods, n_pages, page_size, cfg.n_kv_heads,
-             cfg.resolved_head_dim)
+    shape = (cfg.n_periods,) + pool_shape(n_pages, page_size,
+                                          cfg.n_kv_heads,
+                                          cfg.resolved_head_dim)
     return tuple({"k_pages": jnp.zeros(shape, dtype),
                   "v_pages": jnp.zeros(shape, dtype)}
                  for _ in cfg.period)
@@ -304,7 +308,10 @@ def decode_step_paged(params: Params, token: Array, pools, block_tables,
 
     token (B, 1) int32; block_tables (B, mp) int32; lengths (B,) int32 —
     tokens already cached per slot (the block table and cursor are shared
-    by every layer; the pools are per-layer).  Returns
+    by every layer; the pools are per-layer).  The block tables flow
+    through unchanged to the attention dispatch (``run.paged_backend``):
+    the Pallas kernel walks them page by page, and no contiguous KV view
+    is materialized anywhere on that path.  Returns
     (logits (B, 1, V), new_pools).
     """
     npd = cfg.n_periods

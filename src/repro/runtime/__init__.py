@@ -5,8 +5,9 @@ from repro.runtime.train_loop import (TrainState, init_train_state,
                                       make_train_step, cross_entropy)
 from repro.runtime.serve_loop import (generate, make_decode_step,
                                       make_prefill_step, sample_token)
-from repro.runtime.paged_cache import (NULL_PAGE, OutOfPagesError,
-                                       PageAllocator, PagedCacheConfig)
+from repro.runtime.paged_cache import (NULL_PAGE, DecodeView, OutOfPagesError,
+                                       PageAllocator, PagedCacheConfig,
+                                       decode_view, pool_shape)
 from repro.runtime.scheduler import Request, Scheduler, SeqState
 from repro.runtime.engine import (EngineStats, GenerationResult,
                                   ServingEngine)

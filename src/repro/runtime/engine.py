@@ -9,9 +9,12 @@ the decode step's shapes (slots × block-table width × pool) are fixed at
 engine construction.
 
 The attention softmax is governed by ``run.softmax_policy`` exactly as
-in the lockstep path (exact / REXP / 2D-LUT at any precision), and the
-decode attention is the dense gather-from-block-table fallback, so the
-engine runs unchanged on CPU-only CI.
+in the lockstep path (exact / REXP / 2D-LUT at any precision).  Decode
+attention ships the block tables straight to the paged-attention
+dispatch (``run.paged_backend``): on TPU the fused Pallas kernel
+streams K/V pages directly from the pool (no contiguous gather), while
+CPU/GPU hosts run the dense block-table reference — identical per-key
+numerics either way.
 
 Greedy decoding is bit-faithful to ``generate()``: prefill runs the same
 program at ``max_len = max_context``, and the paged decode masks exactly
@@ -31,8 +34,8 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.models.model_zoo import Model
 from repro.models import transformer as TF
-from repro.runtime.paged_cache import (NULL_PAGE, PagedCacheConfig,
-                                       block_table_row)
+from repro.runtime.paged_cache import (PagedCacheConfig, block_table_row,
+                                       decode_view)
 from repro.runtime.scheduler import Request, Scheduler, Sequence
 
 
@@ -174,19 +177,11 @@ class ServingEngine:
 
     def _decode_step(self) -> list[Sequence]:
         """One batched decode step over the running slots."""
-        bt = np.full((self.n_slots, self.cache.max_pages_per_seq),
-                     NULL_PAGE, np.int32)
-        lengths = np.zeros((self.n_slots,), np.int32)
-        tokens = np.zeros((self.n_slots, 1), np.int32)
         running = dict(self.scheduler.running)
-        for slot, seq in running.items():
-            bt[slot] = block_table_row(seq.pages,
-                                       self.cache.max_pages_per_seq)
-            lengths[slot] = seq.total_tokens - 1  # cached so far
-            tokens[slot, 0] = seq.generated[-1]   # token entering the cache
+        view = decode_view(running, self.n_slots, self.cache)
         logits, self.pools = self._decode_fn(
-            self.params, jnp.asarray(tokens), self.pools,
-            jnp.asarray(bt), jnp.asarray(lengths))
+            self.params, jnp.asarray(view.tokens), self.pools,
+            jnp.asarray(view.block_tables), jnp.asarray(view.lengths))
         logits = np.asarray(logits)  # (n_slots, 1, V)
         self.stats.steps += 1
         finished = []

@@ -1,13 +1,19 @@
 """Host-side paged-KV bookkeeping for the continuous-batching engine.
 
-The *device* side (pools, block-table gather, scatter-append) lives in
-``repro.models.layers`` / ``repro.models.transformer``; this module owns
-the host-side metadata: which physical pages are free, which belong to
-which sequence, and the block-table rows the device step consumes.
+The *device* side (pools, scatter-append, the paged-decode attention
+kernel) lives in ``repro.models`` / ``repro.kernels.lut_attention``;
+this module owns the host-side metadata — which physical pages are
+free, which belong to which sequence — and assembles the device views
+(block tables, per-slot lengths, entering tokens) the decode step
+consumes.
 
-Layout contract (shared with :class:`repro.models.layers.PagedAttnCache`):
+Layout contract (shared with :class:`repro.models.layers.PagedAttnCache`
+and the Pallas kernel in ``kernels/lut_attention/paged_decode.py``):
 
-* the pool holds ``n_pages`` pages of ``page_size`` tokens each;
+* each layer's pool is **page-major** ``(n_pages, page_size, KVH, Dh)``
+  (:func:`pool_shape`) so one block-table entry addresses one contiguous
+  page and the kernel can stream pages straight from HBM — no per-token
+  indirection, no contiguous per-slot gather;
 * physical page 0 is the reserved **null page** — never allocated, the
   target of every unused block-table entry, so inactive slots and
   padding writes land in garbage space by construction;
@@ -24,6 +30,19 @@ from collections import deque
 import numpy as np
 
 NULL_PAGE = 0
+
+
+def pool_shape(n_pages: int, page_size: int, n_kv_heads: int,
+               head_dim: int) -> tuple[int, int, int, int]:
+    """The kernel-facing page-major pool layout, per layer.
+
+    Single source of truth for the device pool shape: the leading axis
+    is the physical page id (what a block-table entry indexes), so a
+    page's ``(page_size, KVH, Dh)`` tokens are contiguous — the unit the
+    paged-decode kernel DMAs per grid step and the prefill scatter
+    writes per page id.
+    """
+    return (n_pages, page_size, n_kv_heads, head_dim)
 
 
 class OutOfPagesError(RuntimeError):
@@ -98,3 +117,36 @@ def block_table_row(pages: list[int], max_pages_per_seq: int) -> np.ndarray:
     row = np.full((max_pages_per_seq,), NULL_PAGE, np.int32)
     row[:len(pages)] = pages
     return row
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeView:
+    """Device-facing view of one decode step over the running slots.
+
+    Exactly what ``decode_step_paged`` consumes — the engine ships these
+    three arrays and the attention kernel walks the pool through them;
+    no contiguous KV is ever assembled on either side.  Inactive slots
+    keep all-null block tables, length 0 and token 0: their (masked)
+    writes land on the null page by construction.
+    """
+
+    block_tables: np.ndarray  # (n_slots, max_pages_per_seq) int32
+    lengths: np.ndarray       # (n_slots,) int32 — tokens already cached
+    tokens: np.ndarray        # (n_slots, 1) int32 — token entering the cache
+
+
+def decode_view(running: dict[int, "object"], n_slots: int,
+                cache: PagedCacheConfig) -> DecodeView:
+    """Assemble the decode-step device view from the scheduler's slot map.
+
+    ``running`` maps slot → scheduler ``Sequence`` (needs ``.pages``,
+    ``.total_tokens`` and ``.generated``).
+    """
+    bt = np.full((n_slots, cache.max_pages_per_seq), NULL_PAGE, np.int32)
+    lengths = np.zeros((n_slots,), np.int32)
+    tokens = np.zeros((n_slots, 1), np.int32)
+    for slot, seq in running.items():
+        bt[slot] = block_table_row(seq.pages, cache.max_pages_per_seq)
+        lengths[slot] = seq.total_tokens - 1  # cached so far
+        tokens[slot, 0] = seq.generated[-1]   # token entering the cache
+    return DecodeView(block_tables=bt, lengths=lengths, tokens=tokens)

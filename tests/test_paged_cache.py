@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.policies import SoftmaxPolicy
-from repro.kernels.lut_attention.ops import (lut_attention,
+from repro.kernels.lut_attention.ops import (gather_pages, lut_attention,
                                              lut_attention_decode_varlen)
 from repro.models import layers as L
 from repro.runtime.paged_cache import (NULL_PAGE, OutOfPagesError,
@@ -85,7 +85,7 @@ def test_gather_pages_reassembles_logical_order(rng):
                        .astype(np.float32))
     # two slots with interleaved, out-of-order physical pages
     bt = jnp.asarray(np.array([[5, 2, 8], [1, 7, NULL_PAGE]], np.int32))
-    out = L.gather_pages(pool, bt)
+    out = gather_pages(pool, bt)
     assert out.shape == (2, kvh, 3 * ps, dh)
     np_pool = np.asarray(pool)
     for b in range(2):

@@ -5,10 +5,18 @@ Reads a pytest junit XML report and compares against the committed
 ``tests/baseline.json``:
 
 * ``passed``            must not drop below the baseline;
-* ``failed + errors``   must not rise above the baseline.
+* ``failed + errors``   must not rise above the baseline;
+* per-suite floors: the optional ``suites`` map pins a minimum passed
+  count per test module (matched as a classname substring), so a
+  critical suite — e.g. the paged-kernel parity tests — cannot be
+  silently skipped or deleted while the global count still clears.
 
 The baseline only ratchets forward: burn down a failure (or add tests),
 re-record with ``--update``, commit — CI then holds the new line.
+``--update`` re-records the totals but carries the ``suites`` floors
+over unchanged: they are set by hand, conservatively, because a suite's
+exact count can differ per environment (e.g. the hypothesis property
+collapses to fewer fixed-seed cases when the dev extra is absent).
 
   PYTHONPATH=src python -m pytest -q --junitxml=junit.xml
   python tools/check_baseline.py junit.xml
@@ -44,6 +52,22 @@ def read_junit(path: str) -> dict:
     }
 
 
+def suite_passed_counts(path: str, suite_keys: list[str]) -> dict[str, int]:
+    """Passed testcases per pinned suite (classname substring match)."""
+    root = ET.parse(path).getroot()
+    counts = {k: 0 for k in suite_keys}
+    for case in root.iter("testcase"):
+        bad = any(child.tag in ("failure", "error", "skipped")
+                  for child in case)
+        if bad:
+            continue
+        cls = case.get("classname", "")
+        for k in suite_keys:
+            if k in cls:
+                counts[k] += 1
+    return counts
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("junit_xml")
@@ -54,12 +78,15 @@ def main() -> int:
 
     current = read_junit(args.junit_xml)
     path = pathlib.Path(args.baseline)
+    prior = json.loads(path.read_text()) if path.exists() else {}
     if args.update:
+        if prior.get("suites"):  # hand-set floors carry over unchanged
+            current["suites"] = prior["suites"]
         path.write_text(json.dumps(current, indent=2) + "\n")
         print(f"baseline updated: {current}")
         return 0
 
-    baseline = json.loads(path.read_text())
+    baseline = prior
     print(f"current : {current}")
     print(f"baseline: {baseline}")
     bad_now = current["failed"] + current["errors"]
@@ -71,6 +98,13 @@ def main() -> int:
     if bad_now > bad_base:
         problems.append(
             f"failures+errors rose: {bad_now} > {bad_base}")
+    suites = baseline.get("suites", {})
+    if suites:
+        got = suite_passed_counts(args.junit_xml, sorted(suites))
+        for key, floor in sorted(suites.items()):
+            if got[key] < floor:
+                problems.append(
+                    f"suite '{key}' passed dropped: {got[key]} < {floor}")
     if problems:
         for p in problems:
             print(f"REGRESSION: {p}", file=sys.stderr)
