@@ -16,12 +16,20 @@ on (a) stragglers padding out their batch and (b) fragmented batches
 below capacity; the engine keeps every slot busy.  All paths produce
 token-identical output, so the gaps are pure scheduling + kernel.
 
+A second scenario (``bench_ttft``) drives a *long-prompt mixed*
+workload through the chunked paged prefill: short requests decode while
+long prompts prefill chunk by chunk, and the benchmark records
+time-to-first-token plus the longest wall-clock gap between decode
+steps (the decode-stall the chunking exists to kill), chunked vs
+monolithic (whole-prompt-sized chunk).
+
   PYTHONPATH=src python -m benchmarks.serving_throughput [--fast] [--json]
 
 Prints ``name,us_per_call,derived`` CSV rows like benchmarks/run.py.
 ``--json`` additionally sweeps every softmax policy and writes
-``BENCH_serving.json`` (tokens/s per driver per policy) so the perf
-trajectory is machine-readable across PRs.
+``BENCH_serving.json`` (tokens/s per driver per policy, plus the
+long-prompt TTFT/stall scenario) so the perf trajectory is
+machine-readable across PRs.
 """
 
 from __future__ import annotations
@@ -191,6 +199,74 @@ def bench(n_requests: int = 24, n_slots: int = 4, seed: int = 0,
     }
 
 
+def bench_ttft(seed: int = 0, impl: str = "rexp",
+               prefill_chunk: int = 8) -> dict:
+    """Long-prompt mixed workload: TTFT and decode-stall, chunked vs
+    monolithic prefill.
+
+    Short requests occupy the decode slots while long prompts arrive.
+    ``chunked`` prefills the long prompts ``prefill_chunk`` tokens per
+    engine step, interleaved with decode; ``monolithic`` sets the chunk
+    to the whole context (one chunk per prompt — the old whole-prompt
+    behavior, same compiled-once program), so every long prefill runs
+    start-to-finish between two decode steps.  The stall metric is the
+    longest wall-clock gap between consecutive decode steps
+    (``EngineStats.max_decode_gap_s``): chunking must shrink it, at the
+    price of a later first token for the long prompts — both sides of
+    the trade are recorded.
+    """
+    arch = ARCHS["qwen3-32b"].scaled_down(d_model=64, n_heads=4, vocab=128,
+                                          n_periods=2)
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = PagedCacheConfig(n_pages=64, page_size=8, max_pages_per_seq=10)
+    rng = np.random.default_rng(seed)
+    shorts = [(rng.integers(0, 128, size=int(l)).tolist(), 24)
+              for l in rng.integers(4, 9, size=6)]
+    longs = [(rng.integers(0, 128, size=int(l)).tolist(), 8)
+             for l in rng.integers(56, 65, size=2)]
+    # two shorts warm the slots, then a long arrives mid-decode, etc.
+    requests = shorts[:2] + longs[:1] + shorts[2:] + longs[1:]
+    long_ids = {2, len(requests) - 1}
+    warm = [(p, 2) for p, _ in requests[:3]]
+    run = _run_cfg(impl)
+
+    def measure(chunk: int) -> dict:
+        eng = ServingEngine(model, params, run, n_slots=3, cache=cache,
+                            prefill_chunk=chunk)
+        eng.run(warm)
+        best: dict | None = None
+        for _ in range(2):
+            dt, out = _time_requests(eng, requests)
+            if best is None or dt < best["s"]:
+                ttfts = {i: out[i].ttft_s for i in range(len(requests))}
+                best = {
+                    "s": dt,
+                    "ttft_mean_s": float(np.mean(list(ttfts.values()))),
+                    "ttft_long_mean_s": float(np.mean(
+                        [ttfts[i] for i in long_ids])),
+                    "ttft_short_mean_s": float(np.mean(
+                        [t for i, t in ttfts.items() if i not in long_ids])),
+                    "max_decode_gap_s": eng.stats.max_decode_gap_s,
+                    "prefill_steps": eng.stats.prefill_steps,
+                    "decode_steps": eng.stats.steps,
+                }
+        return best
+
+    chunked = measure(prefill_chunk)
+    monolithic = measure(cache.max_context)
+    return {
+        "workload": {"n_short": len(shorts), "n_long": len(longs),
+                     "long_prompt_tokens": [len(p) for p, _ in longs],
+                     "n_slots": 3, "seed": seed, "policy": impl},
+        "prefill_chunk": prefill_chunk,
+        "chunked": chunked,
+        "monolithic": monolithic,
+        "decode_stall_reduction": (monolithic["max_decode_gap_s"]
+                                   / max(chunked["max_decode_gap_s"], 1e-9)),
+    }
+
+
 def write_json(n_requests: int, n_slots: int, seed: int) -> dict:
     """Sweep every policy and record tokens/s per driver in
     ``BENCH_serving.json`` (the cross-PR perf trajectory artifact)."""
@@ -209,6 +285,7 @@ def write_json(n_requests: int, n_slots: int, seed: int) -> dict:
             "engine_dense": round(r["engine_dense_tok_s"], 1),
             "engine_paged_kernel": round(r["engine_paged_kernel_tok_s"], 1),
         } for impl, r in results.items()},
+        "long_prompt_mixed": bench_ttft(seed=seed),
     }
     JSON_PATH.write_text(json.dumps(doc, indent=2) + "\n")
     return doc
@@ -236,6 +313,17 @@ def main() -> None:
           f"({r['useful_tokens']} useful tokens; "
           f"{r['engine_decode_steps']} decode steps; "
           f"{r['engine_preemptions']} preemptions)")
+    t = bench_ttft()
+    print(f"serving_ttft_chunked,{t['chunked']['ttft_mean_s'] * 1e6:.0f},"
+          f"stall {t['chunked']['max_decode_gap_s'] * 1e3:.1f} ms "
+          f"(chunk={t['prefill_chunk']})")
+    print(f"serving_ttft_monolithic,"
+          f"{t['monolithic']['ttft_mean_s'] * 1e6:.0f},"
+          f"stall {t['monolithic']['max_decode_gap_s'] * 1e3:.1f} ms "
+          f"(chunk=max_context)")
+    print(f"serving_decode_stall_reduction,,"
+          f"{t['decode_stall_reduction']:.2f}x smaller max decode gap "
+          f"with chunked prefill")
 
 
 if __name__ == "__main__":

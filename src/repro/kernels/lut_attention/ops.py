@@ -17,6 +17,12 @@ Pallas paged kernel (TPU — K/V stream straight from the page pool
 through per-slot block tables, no contiguous gather) and the dense
 reference (CPU/GPU, and interpret-mode CI — gather-from-block-table,
 materialized logits).  Both produce the same per-key numerics.
+
+Chunked paged *prefill* goes through :func:`lut_attention_paged_prefill`:
+the chunk's K/V are already in the pool, prior keys are read through the
+same block tables, and the chunk's queries run either the blocked path
+(per-row traced ``kv_len`` + ``q_start`` cursors) or the materialized
+oracle — one compiled program for every prompt length.
 """
 
 from __future__ import annotations
@@ -52,12 +58,29 @@ def _tables_for(policy: SoftmaxPolicy):
 
 
 def _chunk_mask(q0: Array | int, k0: Array | int, bq: int, bk: int,
-                causal: bool, lq: int, lk_eff: Array | int):
-    """(bq, bk) visibility mask for a (q-chunk, k-chunk) tile."""
-    ki = k0 + jnp.arange(bk)[None, :]
-    mask = ki < lk_eff
+                causal: bool, lq: int, lk_eff: Array | int,
+                q_start: Array | int | None = None):
+    """Visibility mask for a (q-chunk, k-chunk) tile.
+
+    ``lk_eff`` (valid key count) and ``q_start`` (absolute position of
+    query row 0) may be scalars or per-row ``(B,)`` arrays — the chunked
+    paged-prefill path masks per slot.  Returns a mask broadcastable
+    against the ``(B, KVH, G, bq, bk)`` logits tile: ``(bq, bk)`` gains
+    a leading batch axis only when a per-row argument is given.
+
+    When ``q_start`` is None the causal alignment assumes the queries
+    are the *last* ``lq`` positions of the valid keys (the lockstep
+    decode/prefill convention ``q_start = lk_eff - lq``).
+    """
+    def _b(x):  # scalar → broadcast as-is; (B,) → (B, 1, 1, 1, 1)
+        x = jnp.asarray(x)
+        return x.reshape(-1, 1, 1, 1, 1) if x.ndim == 1 else x
+    ki = (k0 + jnp.arange(bk))[None, :]          # (1, bk)
+    mask = ki < _b(lk_eff)
     if causal:
-        qi = q0 + jnp.arange(bq)[:, None] + (lk_eff - lq)
+        if q_start is None:
+            q_start = jnp.asarray(lk_eff) - lq
+        qi = (q0 + jnp.arange(bq))[:, None] + _b(q_start)
         mask = mask & (ki <= qi)
     return mask
 
@@ -73,6 +96,7 @@ def lut_attention_blocked(
     causal: bool = False,
     scale: float | None = None,
     kv_len: Array | int | None = None,
+    q_start: Array | int | None = None,
     q_chunk: int = 512,
     k_chunk: int = 1024,
     unroll: bool = False,
@@ -83,23 +107,26 @@ def lut_attention_blocked(
     cost_analysis counts a while body once, so the probe program must be
     loop-free to account every tile — EXPERIMENTS.md §Methodology).
 
-    q (B,H,Lq,D); k,v (B,KVH,Lk,D).  ``kv_len`` (traced ok) masks the tail
-    of a pre-allocated KV cache.  Never materializes more than a
+    q (B,H,Lq,D); k,v (B,KVH,Lk,D).  ``kv_len`` (traced ok; scalar or
+    per-row (B,)) masks the tail of a pre-allocated KV cache.
+    ``q_start`` (scalar or (B,)) pins the absolute position of query
+    row 0 for the causal mask — chunked paged prefill places a chunk's
+    queries *inside* the valid keys rather than at their tail (the
+    default ``kv_len − Lq`` alignment).  Never materializes more than a
     (q_chunk × k_chunk) logits tile per (batch, head).
     """
     b, h, lq, d = q.shape
     kvh, lk = k.shape[1], k.shape[2]
     g = h // kvh
     scale = scale if scale is not None else d ** -0.5
-    lk_eff = lk if kv_len is None else kv_len
     tables = _tables_for(policy)
     exact = policy.impl == "exact"
 
     bq = min(q_chunk, lq)
     bk = min(k_chunk, lk)
-    # pad to chunk multiples; padded KV is masked via lk_eff, padded Q
-    # rows compute junk that is sliced off at the end.
-    lq_orig = lq
+    # pad to chunk multiples; padded Q rows compute junk that is sliced
+    # off at the end.
+    lq_orig, lk_orig = lq, lk
     lq_p = -(-lq // bq) * bq
     lk_p = -(-lk // bk) * bk
     if lq_p != lq:
@@ -107,8 +134,11 @@ def lut_attention_blocked(
     if lk_p != lk:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, lk_p - lk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, lk_p - lk), (0, 0)))
-        if kv_len is None:
-            lk_eff = lk  # mask the structural padding
+    # the valid-key count NEVER includes structural K padding: without a
+    # kv_len it is the *pre-pad* Lk (this used to rely on reading ``lk``
+    # before its reassignment — now explicit), and a caller kv_len is
+    # trusted to be ≤ Lk.
+    lk_eff = lk_orig if kv_len is None else kv_len
     lq, lk = lq_p, lk_p
     nq, nk = lq // bq, lk // bk
 
@@ -126,8 +156,8 @@ def lut_attention_blocked(
                 kc, vc, ki = xs
                 s = _grouped_logits(qc, kc, scale)
                 mask = _chunk_mask(qi * bq, ki * bk, bq, bk, causal,
-                                   lq_orig, lk_eff)
-                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                                   lq_orig, lk_eff, q_start)
+                s = jnp.where(mask, s, -jnp.inf)
                 m_new = jnp.maximum(m, jnp.max(s, axis=-1))
                 m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
                 p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]),
@@ -171,8 +201,8 @@ def lut_attention_blocked(
                 kc, ki = xs
                 s = _grouped_logits(qc, kc, scale)
                 mask = _chunk_mask(qi * bq, ki * bk, bq, bk, causal,
-                                   lq_orig, lk_eff)
-                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                                   lq_orig, lk_eff, q_start)
+                s = jnp.where(mask, s, -jnp.inf)
                 return jnp.maximum(m, jnp.max(s, axis=-1)), None
 
             m0 = jnp.full((b, kvh, g, bq), -jnp.inf, jnp.float32)
@@ -185,8 +215,8 @@ def lut_attention_blocked(
                 kc, vc, ki = xs
                 s = _grouped_logits(qc, kc, scale)
                 mask = _chunk_mask(qi * bq, ki * bk, bq, bk, causal,
-                                   lq_orig, lk_eff)
-                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+                                   lq_orig, lk_eff, q_start)
+                s = jnp.where(mask, s, -jnp.inf)
                 e = e_int_of(s, m_safe).astype(jnp.float32)
                 ssum = ssum + jnp.sum(e, axis=-1)
                 u = u + jnp.einsum("bngqk,bnkd->bngqd", e,
@@ -269,6 +299,24 @@ def lut_attention(
                                   fused_requant=fused_requant)
 
 
+def _policy_softmax(s: Array, policy: SoftmaxPolicy) -> Array:
+    """Masked logits (−inf tails) → σ under the policy's semantics.
+
+    Single dispatch point for every dense serving path (lockstep
+    kv_len, varlen decode, chunked prefill) — one place to extend when
+    a policy is added, so the paths cannot silently diverge.
+    """
+    if policy.impl == "exact":
+        return _core.softmax_exact(s, axis=-1)
+    if policy.impl == "rexp":
+        return _core.softmax_rexp(s, _tables_for(policy), axis=-1,
+                                  index_mode=policy.index_mode)
+    if policy.impl == "lut2d":
+        return _core.softmax_lut2d(s, _tables_for(policy), axis=-1,
+                                   index_mode=policy.index_mode)
+    raise ValueError(f"unsupported softmax policy {policy.impl!r}")
+
+
 def _grouped_pv(p: Array, v: Array) -> Array:
     """σ (B, H, Lq, Lk) × v (B, KVH, Lk, D) → (B, H, Lq, D) without
     materializing a duplicated (B, H, Lk, D) value tensor: the query-head
@@ -306,17 +354,85 @@ def lut_attention_decode_varlen(
     ki = jnp.arange(lk)
     valid = ki[None, :] < kv_lens[:, None]       # (B, Lk)
     s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
-    if policy.impl == "exact":
-        p = _core.softmax_exact(s, axis=-1)
-    elif policy.impl == "rexp":
-        p = _core.softmax_rexp(s, _tables_for(policy), axis=-1,
-                               index_mode=policy.index_mode)
-    elif policy.impl == "lut2d":
-        p = _core.softmax_lut2d(s, _tables_for(policy), axis=-1,
-                                index_mode=policy.index_mode)
-    else:
-        raise ValueError(f"unsupported decode policy {policy.impl!r}")
-    return _grouped_pv(p, v)
+    return _grouped_pv(_policy_softmax(s, policy), v)
+
+
+def lut_attention_prefill_varlen(
+    q: Array, k: Array, v: Array, policy: SoftmaxPolicy, *,
+    q_start: Array, kv_lens: Array,
+    scale: float | None = None,
+) -> Array:
+    """Chunked-prefill attention with materialized logits (the oracle).
+
+    One prompt *chunk* attends causally to everything already cached
+    plus itself: query row i sits at absolute position ``q_start + i``
+    and sees keys ``[0, q_start + i]``; keys at or past ``kv_lens``
+    (junk pool content, structural padding) are masked per row.  Both
+    ``q_start`` and ``kv_lens`` are (B,) int32 — every slot carries its
+    own cursor.
+
+    q (B, H, C, D) chunk queries; k, v (B, KVH, Lk, D) — the
+    block-table-gathered logical view of the paged pool.  Masking with
+    −inf before the policy softmax keeps the per-key numerics exactly
+    those of the whole-prompt naive path, which is what makes chunked
+    engine prefill token-identical to lockstep ``generate()``.
+    """
+    b, h, lq, d = q.shape
+    lk = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    s = _ref._logits(q, k, scale, causal=False)   # (B, H, C, Lk) f32
+    ki = jnp.arange(lk)[None, None, None, :]
+    qi = (q_start[:, None] + jnp.arange(lq)[None, :])[:, None, :, None]
+    mask = (ki <= qi) & (ki < kv_lens[:, None, None, None])
+    s = jnp.where(mask, s, -jnp.inf)
+    return _grouped_pv(_policy_softmax(s, policy), v)
+
+
+def lut_attention_paged_prefill(
+    q: Array,               # (B, C, H·D)-projected chunk queries (B, H, C, D)
+    k_pages: Array,         # (num_pages, page_size, KVH, D) shared pool
+    v_pages: Array,
+    block_tables: Array,    # (B, max_pages_per_seq) int32
+    q_start: Array,         # (B,) int32 — tokens cached before this chunk
+    kv_lens: Array,         # (B,) int32 — valid keys incl. this chunk
+    policy: SoftmaxPolicy,
+    *,
+    scale: float | None = None,
+    backend: str = "naive",  # 'naive' | 'blocked' | 'pallas'
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> Array:
+    """Prefill-chunk attention reading prior keys through the block
+    tables — the chunk's K/V were already scattered into the pool, so
+    the pool *is* the only KV **storage** (no contiguous per-request
+    cache is ever written).
+
+    The read side assembles a transient block-table view per chunk
+    (``gather_pages``, as the dense paged-*decode* reference does per
+    step) and runs the blocked LUT path with per-row ``kv_len`` /
+    ``q_start`` (``backend='blocked'|'pallas'``) or the materialized
+    oracle (``'naive'`` — bitwise the lockstep semantics, the parity
+    configuration).  That per-chunk gather costs O(L/C · max_context)
+    reads over a prompt — acceptable as the reference path; a fused
+    Pallas prefill kernel streaming pages like ``paged_decode`` would
+    remove it.  One compiled program serves every prompt length: all
+    shapes are fixed by (C, block-table width); only the cursors are
+    traced.
+    """
+    if backend not in ("naive", "blocked", "pallas"):
+        raise ValueError(f"unknown prefill attention backend {backend!r}")
+    k_seq = gather_pages(k_pages, block_tables)
+    v_seq = gather_pages(v_pages, block_tables)
+    if backend in ("blocked", "pallas"):
+        # pallas has no paged-prefill kernel yet; the blocked XLA path is
+        # its serving-shape stand-in (same fused-requant semantics)
+        return lut_attention_blocked(q, k_seq, v_seq, policy, causal=True,
+                                     scale=scale, kv_len=kv_lens,
+                                     q_start=q_start, q_chunk=q_chunk,
+                                     k_chunk=k_chunk)
+    return lut_attention_prefill_varlen(q, k_seq, v_seq, policy,
+                                        q_start=q_start, kv_lens=kv_lens,
+                                        scale=scale)
 
 
 def _naive_with_bias(q, k, v, policy, causal, scale, k_bias, fused_requant,
@@ -336,15 +452,7 @@ def _naive_with_bias(q, k, v, policy, causal, scale, k_bias, fused_requant,
         qi = jnp.arange(lq)[:, None] + (kv_len - lq)
         ki = jnp.arange(lk)[None, :]
         s = jnp.where((ki <= qi)[None, None], s, -jnp.inf)
-    if policy.impl == "exact":
-        p = _core.softmax_exact(s, axis=-1)
-    elif policy.impl == "rexp":
-        t = _tables_for(policy)
-        p = _core.softmax_rexp(s, t, axis=-1, index_mode=policy.index_mode)
-    else:
-        t = _tables_for(policy)
-        p = _core.softmax_lut2d(s, t, axis=-1, index_mode=policy.index_mode)
-    return _grouped_pv(p, v)
+    return _grouped_pv(_policy_softmax(s, policy), v)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,11 @@ technique.  Two drivers:
 * ``--engine continuous``  — the paged-KV continuous-batching engine
   (mixed prompt/output lengths share the decode batch; default).
 
+``--prefill-chunk`` sizes the continuous engine's chunked paged
+prefill: prompts enter the page pool in fixed-size chunks (one compile
+for every prompt length) interleaved with decode steps, so a long
+prompt does not stall running slots.
+
 ``--paged-backend`` selects the continuous engine's decode-attention
 kernel: ``auto`` (default) runs the fused Pallas paged kernel on TPU
 and the dense block-table reference elsewhere (GPU included, until a
@@ -61,6 +66,14 @@ def main() -> None:
                          "paged kernel vs dense block-table reference")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per chunked-prefill step; one "
+                         "compile serves every prompt length, and chunks "
+                         "interleave with decode so long prompts do not "
+                         "stall running slots")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prompt tokens prefilled per engine step "
+                         "(default: one chunk)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -103,7 +116,8 @@ def main() -> None:
         cache = PagedCacheConfig(n_pages=args.n_pages, page_size=page_size,
                                  max_pages_per_seq=mp)
         eng = ServingEngine(model, params, run, n_slots=args.batch,
-                            cache=cache)
+                            cache=cache, prefill_chunk=args.prefill_chunk,
+                            prefill_budget=args.prefill_budget)
         rng = np.random.default_rng(args.seed)
         # mixed lengths: the workload lockstep cannot batch
         for b in range(args.batch):
@@ -117,12 +131,16 @@ def main() -> None:
         dt = time.time() - t0
         toks = eng.stats.tokens
         from repro.kernels.lut_attention.ops import resolve_paged_backend
+        ttfts = [r.ttft_s for r in results.values() if r.ttft_s is not None]
         print(f"policy={policy.impl}/{policy.precision} continuous-batching "
               f"[decode attention: "
               f"{resolve_paged_backend(args.paged_backend)}]: "
               f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. "
               f"compile; {eng.stats.steps} decode steps, "
-              f"{eng.stats.preemptions} preemptions)")
+              f"{eng.stats.prefill_steps} prefill chunks of "
+              f"{args.prefill_chunk}, {eng.stats.preemptions} preemptions, "
+              f"mean TTFT {np.mean(ttfts):.3f}s, max decode stall "
+              f"{eng.stats.max_decode_gap_s:.3f}s)")
         print("sample token ids:", results[0].tokens[:16].tolist())
         return
 

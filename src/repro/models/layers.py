@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.core.policies import EXACT, SoftmaxPolicy
 from repro.kernels.lut_attention.ops import (lut_attention,
-                                             lut_attention_paged_decode)
+                                             lut_attention_paged_decode,
+                                             lut_attention_paged_prefill)
 
 Array = jax.Array
 Params = dict[str, Any]
@@ -181,6 +182,82 @@ jax.tree_util.register_dataclass(
     PagedAttnCache, ["k_pages", "v_pages", "block_tables", "lengths"], [])
 
 
+@dataclasses.dataclass
+class PagedPrefillCache:
+    """Chunked-prefill view of the paged pool.
+
+    Same storage contract as :class:`PagedAttnCache`, but the entering
+    unit is a fixed-size *chunk* of prompt tokens rather than one decode
+    token: ``lengths`` is the per-slot count of tokens already cached
+    (the chunk's first absolute position) and ``chunk_lens`` how many of
+    the chunk's rows are real prompt tokens — the tail past it is
+    structural padding whose K/V writes are routed to the null page and
+    whose attention rows are discarded by the caller.  One compiled
+    program serves every prompt length: only the two cursors are traced.
+    """
+
+    k_pages: Array       # (n_pages, page_size, KVH, Dh)
+    v_pages: Array
+    block_tables: Array  # (B, max_pages_per_seq) int32
+    lengths: Array       # (B,) int32 — tokens cached before this chunk
+    chunk_lens: Array    # (B,) int32 — valid tokens entering this chunk
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[1]
+
+
+jax.tree_util.register_dataclass(
+    PagedPrefillCache,
+    ["k_pages", "v_pages", "block_tables", "lengths", "chunk_lens"], [])
+
+
+def _paged_prefill_chunk(p: Params, x: Array, cache: PagedPrefillCache, *,
+                         n_heads: int, n_kv_heads: int, head_dim: int,
+                         qk_norm: bool, norm_eps: float,
+                         rope_theta: float | None, policy: SoftmaxPolicy,
+                         backend: str, q_chunk: int, k_chunk: int):
+    """One prompt chunk against the paged pool — scatter-then-attend.
+
+    The chunk's K/V go straight into the pool pages at positions
+    ``[lengths, lengths + chunk_lens)`` through the block table (no
+    contiguous per-request cache is ever materialized), then the chunk's
+    queries attend to every prior key *through the same block tables*
+    via :func:`lut_attention_paged_prefill`.  Padding rows (row index ≥
+    ``chunk_lens``) write to the null page and read garbage that the
+    engine discards; per-chunk max-normalization inside the attention is
+    exactly the whole-prompt path's, so the LUT tables see the ranges
+    they were calibrated for.
+    """
+    b, c, _ = x.shape
+    positions = cache.lengths[:, None] + jnp.arange(c, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, qk_norm,
+                           norm_eps, rope_theta, positions)
+    ps = cache.page_size
+    mp = cache.block_tables.shape[1]
+    valid = jnp.arange(c)[None, :] < cache.chunk_lens[:, None]   # (B, C)
+    page_idx = jnp.clip(positions // ps, 0, mp - 1)
+    offs = positions % ps
+    phys = jnp.take_along_axis(cache.block_tables, page_idx, axis=1)
+    # padding rows (and anything past the block table) land on the null
+    # page, which is garbage by definition — the write needs no branch
+    phys = jnp.where(valid & (positions // ps < mp), phys, 0)
+    k_tok = k.transpose(0, 2, 1, 3).astype(cache.k_pages.dtype)  # (B,C,KVH,Dh)
+    v_tok = v.transpose(0, 2, 1, 3).astype(cache.v_pages.dtype)
+    k_pages = cache.k_pages.at[phys, offs].set(k_tok)
+    v_pages = cache.v_pages.at[phys, offs].set(v_tok)
+
+    out = lut_attention_paged_prefill(
+        q, k_pages, v_pages, cache.block_tables,
+        q_start=cache.lengths, kv_lens=cache.lengths + cache.chunk_lens,
+        policy=policy, backend=backend, q_chunk=q_chunk, k_chunk=k_chunk)
+    new_cache = PagedPrefillCache(
+        k_pages=k_pages, v_pages=v_pages, block_tables=cache.block_tables,
+        lengths=cache.lengths + cache.chunk_lens,
+        chunk_lens=cache.chunk_lens)
+    return out, new_cache
+
+
 def _paged_decode(p: Params, x: Array, cache: PagedAttnCache, *,
                   n_heads: int, n_kv_heads: int, head_dim: int,
                   qk_norm: bool, norm_eps: float, rope_theta: float | None,
@@ -271,10 +348,20 @@ def apply_attention(
                               cache[:length+1] (traced kv_len).
     """
     b, l, _ = x.shape
+    if isinstance(cache, PagedPrefillCache):
+        if kv_x is not None or precomputed_kv is not None:
+            raise ValueError("paged KV cache supports self-attention only")
+        out, new_cache = _paged_prefill_chunk(
+            p, x, cache, n_heads=n_heads, n_kv_heads=n_kv_heads,
+            head_dim=head_dim, qk_norm=qk_norm, norm_eps=norm_eps,
+            rope_theta=rope_theta, policy=policy, backend=backend,
+            q_chunk=q_chunk, k_chunk=k_chunk)
+        return _out_projection(p, x, out, b, l), new_cache
     if isinstance(cache, PagedAttnCache):
         if l != 1:
-            raise ValueError("paged KV cache is decode-only (single token); "
-                             "prefill goes through the contiguous cache")
+            raise ValueError("paged KV cache decodes one token at a time; "
+                             "prompts go through chunked paged prefill "
+                             "(PagedPrefillCache)")
         if kv_x is not None or precomputed_kv is not None:
             raise ValueError("paged KV cache supports self-attention only")
         out, new_cache = _paged_decode(

@@ -68,9 +68,13 @@ class Model:
         return TF.decode_step_paged(params, token, pools, block_tables,
                                     lengths, self.cfg, run)
 
-    def write_prefill_pages(self, pools, caches, page_ids, page_size: int):
-        """Scatter one sequence's prefilled cache into the paged pools."""
-        return TF.write_prefill_pages(pools, caches, page_ids, page_size)
+    def prefill_chunk_paged(self, params, tokens, pools, block_tables,
+                            cache_lens, chunk_lens, run: RunConfig):
+        """One fixed-shape prompt chunk straight into the paged pools."""
+        if self.is_encdec:
+            raise NotImplementedError("paged prefill: decoder-only LMs")
+        return TF.prefill_chunk_paged(params, tokens, pools, block_tables,
+                                      cache_lens, chunk_lens, self.cfg, run)
 
     def decode_state_struct(self, b: int, max_len: int, run: RunConfig):
         """Abstract (ShapeDtypeStruct) serving state — no allocation."""

@@ -329,28 +329,39 @@ def decode_step_paged(params: Params, token: Array, pools, block_tables,
     return _head(params, cfg, x), new_pools
 
 
-def write_prefill_pages(pools, caches, page_ids, page_size: int):
-    """Scatter a prefilled contiguous cache into the paged pools.
+def prefill_chunk_paged(params: Params, tokens: Array, pools, block_tables,
+                        cache_lens, chunk_lens, cfg: ArchConfig,
+                        run: RunConfig):
+    """One fixed-shape prefill chunk straight into the paged pools.
 
-    ``caches`` is the periods-stacked :class:`AttnCache` pytree returned
-    by :func:`prefill` for ONE sequence (batch 1) whose ``max_len`` is a
-    multiple of ``page_size``; ``page_ids`` (max_len // page_size,) int32
-    gives the physical destination of each logical page.  Entries past
-    the sequence's real page count point at the null page (id 0), so the
-    cache tail lands in garbage space by construction.
+    tokens (B, C) int32, zero-padded past ``chunk_lens``; block_tables
+    (B, mp) int32; cache_lens (B,) int32 — tokens already in the pool
+    (the chunk's first absolute position); chunk_lens (B,) int32 — valid
+    tokens entering this chunk.  Every layer scatters the chunk's K/V
+    into its pool pages and attends through the block tables
+    (:func:`repro.models.layers._paged_prefill_chunk`) — there is no
+    contiguous ``(1, max_context)`` cache at any point, and because C
+    and the block-table width fix every shape, ONE compiled program
+    serves all prompt lengths (the cursors are traced operands).
+
+    Returns ``(logits (B, 1, V), new_pools)``: the LM head applied to
+    each row's last *valid* chunk position — only meaningful for the
+    final chunk of a prompt, but cheap enough to compute always.
     """
-    new_pools = []
-    for pool, c in zip(pools, caches):
-        npd, b, kvh, max_len, dh = c.k.shape
-        mp = max_len // page_size
-        def chunks(a):
-            # (npd, 1, KVH, L, Dh) → (npd, mp, ps, KVH, Dh)
-            a = a[:, 0].transpose(0, 2, 1, 3)
-            return a.reshape(npd, mp, page_size, kvh, dh)
-        new_pools.append({
-            "k_pages": pool["k_pages"].at[:, page_ids].set(
-                chunks(c.k).astype(pool["k_pages"].dtype)),
-            "v_pages": pool["v_pages"].at[:, page_ids].set(
-                chunks(c.v).astype(pool["v_pages"].dtype)),
-        })
-    return tuple(new_pools)
+    npd = cfg.n_periods
+    bt = jnp.broadcast_to(block_tables, (npd,) + block_tables.shape)
+    ln = jnp.broadcast_to(cache_lens, (npd,) + cache_lens.shape)
+    cl = jnp.broadcast_to(chunk_lens, (npd,) + chunk_lens.shape)
+    caches = tuple(
+        L.PagedPrefillCache(k_pages=pool["k_pages"], v_pages=pool["v_pages"],
+                            block_tables=bt, lengths=ln, chunk_lens=cl)
+        for pool in pools)
+    x = L.apply_embedding(params["embed"], tokens, _dtype(run))
+    x, new_caches, _ = _apply_stack(params, x, cfg, run,
+                                    policy=run.softmax_policy, caches=caches)
+    new_pools = tuple({"k_pages": c.k_pages, "v_pages": c.v_pages}
+                      for c in new_caches)
+    last = jnp.clip(chunk_lens - 1, 0, None)[:, None, None]
+    x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+        last, (x.shape[0], 1, x.shape[2])), axis=1)
+    return _head(params, cfg, x_last), new_pools

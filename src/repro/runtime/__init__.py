@@ -7,7 +7,8 @@ from repro.runtime.serve_loop import (generate, make_decode_step,
                                       make_prefill_step, sample_token)
 from repro.runtime.paged_cache import (NULL_PAGE, DecodeView, OutOfPagesError,
                                        PageAllocator, PagedCacheConfig,
-                                       decode_view, pool_shape)
+                                       PrefillChunkView, decode_view,
+                                       pool_shape, prefill_chunk_view)
 from repro.runtime.scheduler import Request, Scheduler, SeqState
 from repro.runtime.engine import (EngineStats, GenerationResult,
                                   ServingEngine)

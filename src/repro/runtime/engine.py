@@ -2,11 +2,23 @@
 
 Replaces the lockstep ``serve_loop.generate`` path for mixed workloads:
 requests of *different* prompt lengths and output budgets share one
-fixed-capacity decode batch.  Each step, finished sequences leave, queued
-requests join (prefill-then-decode), and every slot decodes against its
-own block-table view of the shared page pool — no re-jitting, because
-the decode step's shapes (slots × block-table width × pool) are fixed at
-engine construction.
+fixed-capacity decode batch.  Each step, finished sequences leave,
+queued requests join, and every slot decodes against its own block-table
+view of the shared page pool — no re-jitting anywhere, because every
+device program's shapes are fixed at engine construction.
+
+Prefill is **chunked and paged** (Sarathi-style): an admitted prompt is
+walked in fixed-size chunks whose K/V are written straight into the
+page pool through the sequence's block table — no contiguous
+``(1, max_context)`` cache is ever written, no scatter-after-the-fact
+(the chunk attention's reference path reads a transient block-table
+view per chunk, like the dense decode reference), and because
+the chunk program's shapes are ``(1, prefill_chunk)`` regardless of
+prompt length, ONE prefill compile serves every request (the old path
+retraced per distinct length).  A per-step token budget interleaves
+prefill chunks with decode steps, so a long prompt no longer
+head-of-line-stalls the running slots; time-to-first-token for the
+prompt trades off against decode smoothness via ``prefill_budget``.
 
 The attention softmax is governed by ``run.softmax_policy`` exactly as
 in the lockstep path (exact / REXP / 2D-LUT at any precision).  Decode
@@ -14,11 +26,14 @@ attention ships the block tables straight to the paged-attention
 dispatch (``run.paged_backend``): on TPU the fused Pallas kernel
 streams K/V pages directly from the pool (no contiguous gather), while
 CPU/GPU hosts run the dense block-table reference — identical per-key
-numerics either way.
+numerics either way.  Chunk-prefill attention reads prior keys through
+the same block tables (``lut_attention_paged_prefill``).
 
-Greedy decoding is bit-faithful to ``generate()``: prefill runs the same
-program at ``max_len = max_context``, and the paged decode masks exactly
-the keys the contiguous path masks.
+Greedy decoding is bit-faithful to ``generate()``: chunked prefill
+masks exactly the keys the whole-prompt path masks (per-chunk
+max-normalization over the same visible set keeps the LUT numerators /
+denominators in their calibrated ranges), and the paged decode masks
+exactly the keys the contiguous path masks.
 """
 
 from __future__ import annotations
@@ -34,8 +49,8 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.models.model_zoo import Model
 from repro.models import transformer as TF
-from repro.runtime.paged_cache import (PagedCacheConfig, block_table_row,
-                                       decode_view)
+from repro.runtime.paged_cache import (PagedCacheConfig, decode_view,
+                                       prefill_chunk_view)
 from repro.runtime.scheduler import Request, Scheduler, Sequence
 
 
@@ -45,15 +60,22 @@ class GenerationResult:
     tokens: np.ndarray           # (n_generated,) int32
     finish_reason: str           # 'length' | 'eos'
     n_evictions: int
+    ttft_s: float | None = None  # enqueue → first token (wall clock)
 
 
 @dataclasses.dataclass
 class EngineStats:
     steps: int = 0               # decode steps executed
-    prefills: int = 0
+    prefill_steps: int = 0       # prefill-chunk steps (counted separately)
+    prefills: int = 0            # prompts fully prefilled
     decode_tokens: int = 0       # useful tokens produced by decode steps
     prefill_tokens: int = 0      # first tokens (produced by prefill)
+    prompt_tokens: int = 0       # prompt tokens pushed through chunks
     preemptions: int = 0
+    # longest wall-clock gap between consecutive decode-step COMPLETIONS
+    # (the worst inter-token wait a running slot observes; includes
+    # whatever prefill work ran in between)
+    max_decode_gap_s: float = 0.0
     wall_s: float = 0.0
 
     @property
@@ -70,47 +92,60 @@ class ServingEngine:
       n_slots: decode-batch capacity (sequences decoding concurrently).
       cache: page-pool sizing; ``cache.max_context`` bounds
         ``prompt + max_new_tokens`` of any request.
-      jit: wrap the prefill/write/decode steps in jax.jit.  Prefill
-        retraces per distinct prompt length; decode compiles once.
+      prefill_chunk: prompt tokens per prefill-chunk program.  Shapes
+        are fixed by this, so one compile serves every prompt length.
+      prefill_budget: prompt tokens prefilled per engine step (default:
+        one chunk).  Smaller → smoother decode, later first tokens;
+        larger → the reverse.  At least one chunk always runs per step.
+      jit: wrap the chunk/decode steps in jax.jit.  Both compile once.
     """
 
     def __init__(self, model: Model, params, run: RunConfig, *,
                  n_slots: int = 4,
                  cache: PagedCacheConfig = PagedCacheConfig(),
+                 prefill_chunk: int = 16,
+                 prefill_budget: int | None = None,
                  jit: bool = True):
         if model.is_encdec:
             raise NotImplementedError("engine serves decoder-only LMs")
         TF.check_paged_supported(model.cfg)
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk {prefill_chunk} < 1")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget {prefill_budget} < 1")
         self.model = model
         self.params = params
         self.run_cfg = run
         self.cache = cache
         self.n_slots = n_slots
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else prefill_chunk)
         self.scheduler = Scheduler(cache, n_slots)
         self.pools = model.init_paged_pools(cache.n_pages, cache.page_size,
                                             run)
         self.stats = EngineStats()
         self._results: dict[int, GenerationResult] = {}
+        self._t_added: dict[int, float] = {}
+        self._ttft: dict[int, float] = {}
+        self._last_decode_end: float | None = None
         self._next_id = 0
 
-        def prefill_fn(params, prompt):
-            return model.prefill(params, prompt, run, cache.max_context,
-                                 logits="last")
-
-        def write_fn(pools, caches, page_ids):
-            return model.write_prefill_pages(pools, caches, page_ids,
-                                             cache.page_size)
+        def chunk_fn(params, tokens, pools, block_tables, cache_lens,
+                     chunk_lens):
+            return model.prefill_chunk_paged(params, tokens, pools,
+                                             block_tables, cache_lens,
+                                             chunk_lens, run)
 
         def decode_fn(params, token, pools, block_tables, lengths):
             return model.decode_step_paged(params, token, pools,
                                            block_tables, lengths, run)
 
         # donate the pools: the old buffers are dead the moment the step
-        # returns, so XLA may scatter the new token in place (a no-op on
+        # returns, so XLA may scatter the new K/V in place (a no-op on
         # CPU, where donation is unimplemented, but the serving intent)
-        self._prefill_fn = jax.jit(prefill_fn) if jit else prefill_fn
-        self._write_fn = (jax.jit(write_fn, donate_argnums=(0,))
-                          if jit else write_fn)
+        self._chunk_fn = (jax.jit(chunk_fn, donate_argnums=(2,))
+                          if jit else chunk_fn)
         self._decode_fn = (jax.jit(decode_fn, donate_argnums=(2,))
                            if jit else decode_fn)
 
@@ -126,19 +161,29 @@ class ServingEngine:
             id=rid, prompt=tuple(int(t) for t in np.asarray(prompt)),
             max_new_tokens=max_new_tokens, temperature=temperature,
             seed=seed, eos_id=eos_id))
+        self._t_added[rid] = time.time()
         return rid
 
     def step(self) -> list[GenerationResult]:
-        """Admit + one decode step.  Returns requests finished this step."""
+        """Admit + budgeted prefill chunks + one decode step.
+
+        Returns requests finished this step.
+        """
         finished: list[Sequence] = []
-        while (seq := self.scheduler.try_admit()) is not None:
-            if self._prefill(seq):
+        while self.scheduler.try_admit() is not None:
+            pass
+        for seq, n in self.scheduler.plan_prefill(self.prefill_chunk,
+                                                  self.prefill_budget):
+            if self._prefill_chunk_step(seq, n):
                 finished.append(seq)
-        if self.scheduler.running:
+        if self.scheduler.decode_slots():
             self.scheduler.grow_for_decode()
-            self.stats.preemptions = self.scheduler.n_preemptions
-            if self.scheduler.running:
-                finished.extend(self._decode_step())
+            decode = self.scheduler.decode_slots()  # eviction may shrink it
+            if decode:
+                finished.extend(self._decode_step(decode))
+        # sync unconditionally: eviction counts must be visible even on
+        # steps where every slot drained (used to lag behind one step)
+        self.stats.preemptions = self.scheduler.n_preemptions
         return [self._record(seq) for seq in finished]
 
     def run(self, requests: SeqOf[tuple] | None = None,
@@ -154,6 +199,7 @@ class ServingEngine:
                 self.add_request(**r)
             else:
                 self.add_request(r[0], r[1])
+        self._last_decode_end = None  # stall metric is per drive
         out: dict[int, GenerationResult] = {}
         while self.scheduler.has_work():
             for res in self.step():
@@ -163,26 +209,49 @@ class ServingEngine:
 
     # -- internals --------------------------------------------------------
 
-    def _prefill(self, seq: Sequence) -> bool:
-        """Prefill one admitted sequence; True if it finished immediately."""
-        prompt = jnp.asarray(seq.request.prompt, jnp.int32)[None, :]
-        logits, caches = self._prefill_fn(self.params, prompt)
-        page_ids = block_table_row(seq.pages, self.cache.max_pages_per_seq)
-        self.pools = self._write_fn(self.pools, caches,
-                                    jnp.asarray(page_ids))
+    def _prefill_chunk_step(self, seq: Sequence, n: int) -> bool:
+        """Push one prompt chunk into the pool; True if the request
+        finished outright (single-token budgets / instant EOS)."""
+        view = prefill_chunk_view(seq, n, self.prefill_chunk, self.cache)
+        logits, self.pools = self._chunk_fn(
+            self.params, jnp.asarray(view.tokens), self.pools,
+            jnp.asarray(view.block_tables), jnp.asarray(view.cache_lens),
+            jnp.asarray(view.chunk_lens))
+        self.stats.prefill_steps += 1
+        self.stats.prompt_tokens += n
+        if not self.scheduler.on_prefill_chunk(seq, n):
+            return False
+        # prompt complete: the chunk's last-valid-position logits are the
+        # whole-prompt logits — sample the first token right here
         self.stats.prefills += 1
         self.stats.prefill_tokens += 1
         tok = self._sample(seq, np.asarray(logits[0, 0]))
+        # stamp TTFT only now: np.asarray above blocked on the device, so
+        # the first token actually exists (async dispatch would otherwise
+        # exclude the final chunk's compute from the metric)
+        rid = seq.request.id
+        if rid not in self._ttft:
+            self._ttft[rid] = time.time() - self._t_added.get(rid,
+                                                              time.time())
         return self.scheduler.on_token(seq, tok)
 
-    def _decode_step(self) -> list[Sequence]:
+    def _decode_step(self, running: dict[int, Sequence]) -> list[Sequence]:
         """One batched decode step over the running slots."""
-        running = dict(self.scheduler.running)
         view = decode_view(running, self.n_slots, self.cache)
         logits, self.pools = self._decode_fn(
             self.params, jnp.asarray(view.tokens), self.pools,
             jnp.asarray(view.block_tables), jnp.asarray(view.lengths))
         logits = np.asarray(logits)  # (n_slots, 1, V)
+        # stall metric: completion-to-completion, measured AFTER the sync
+        # above — un-synced prefill chunks queue device work that
+        # surfaces in the next decode completion, so chunked and
+        # monolithic prefill are charged identically (dispatch-time gaps
+        # would under-count the chunked mode's stall on async backends)
+        now = time.time()
+        if self._last_decode_end is not None:
+            self.stats.max_decode_gap_s = max(
+                self.stats.max_decode_gap_s, now - self._last_decode_end)
+        self._last_decode_end = now
         self.stats.steps += 1
         finished = []
         for slot, seq in running.items():
@@ -202,10 +271,13 @@ class ServingEngine:
             key, jnp.asarray(logits_row) / req.temperature))
 
     def _record(self, seq: Sequence) -> GenerationResult:
+        rid = seq.request.id
         res = GenerationResult(
-            request_id=seq.request.id,
+            request_id=rid,
             tokens=np.asarray(seq.generated, np.int32),
             finish_reason=seq.finish_reason or "length",
-            n_evictions=seq.n_evictions)
-        self._results[seq.request.id] = res
+            n_evictions=seq.n_evictions,
+            ttft_s=self._ttft.pop(rid, None))  # drop per-request timing
+        self._t_added.pop(rid, None)           # state with the result
+        self._results[rid] = res
         return res

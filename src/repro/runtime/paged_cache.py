@@ -39,8 +39,8 @@ def pool_shape(n_pages: int, page_size: int, n_kv_heads: int,
     Single source of truth for the device pool shape: the leading axis
     is the physical page id (what a block-table entry indexes), so a
     page's ``(page_size, KVH, Dh)`` tokens are contiguous — the unit the
-    paged-decode kernel DMAs per grid step and the prefill scatter
-    writes per page id.
+    paged-decode kernel DMAs per grid step and the target the chunked
+    prefill scatters each prompt token into through the block table.
     """
     return (n_pages, page_size, n_kv_heads, head_dim)
 
@@ -133,6 +133,45 @@ class DecodeView:
     block_tables: np.ndarray  # (n_slots, max_pages_per_seq) int32
     lengths: np.ndarray       # (n_slots,) int32 — tokens already cached
     tokens: np.ndarray        # (n_slots, 1) int32 — token entering the cache
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunkView:
+    """Device-facing view of one prompt chunk entering the pool.
+
+    Exactly what ``prefill_chunk_paged`` consumes — fixed shapes
+    ``(1, C)`` / ``(1, mp)`` regardless of prompt length, so one
+    compiled chunk program serves every request.  ``tokens`` is
+    zero-padded past ``chunk_lens``; the padded rows' K/V writes land
+    on the null page and their attention rows are discarded.
+    """
+
+    tokens: np.ndarray        # (1, C) int32 — this chunk's prompt slice
+    block_tables: np.ndarray  # (1, max_pages_per_seq) int32
+    cache_lens: np.ndarray    # (1,) int32 — tokens already in the pool
+    chunk_lens: np.ndarray    # (1,) int32 — valid tokens in this chunk
+
+
+def prefill_chunk_view(seq: "object", n: int, chunk: int,
+                       cache: PagedCacheConfig) -> PrefillChunkView:
+    """Assemble the next-chunk device view for one prefilling sequence.
+
+    ``seq`` is a scheduler ``Sequence`` (needs ``.request.prompt``,
+    ``.prefilled`` and ``.pages``); ``n`` ≤ ``chunk`` is the number of
+    prompt tokens this chunk carries (the last chunk of a prompt is
+    usually partial).
+    """
+    if not 1 <= n <= chunk:
+        raise ValueError(f"chunk carries {n} tokens, want 1..{chunk}")
+    start = seq.prefilled
+    tokens = np.zeros((1, chunk), np.int32)
+    tokens[0, :n] = seq.request.prompt[start:start + n]
+    return PrefillChunkView(
+        tokens=tokens,
+        block_tables=block_table_row(seq.pages,
+                                     cache.max_pages_per_seq)[None],
+        cache_lens=np.asarray([start], np.int32),
+        chunk_lens=np.asarray([n], np.int32))
 
 
 def decode_view(running: dict[int, "object"], n_slots: int,

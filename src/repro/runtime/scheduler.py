@@ -2,17 +2,21 @@
 
 Pure host-side state machine — no jax.  A request moves through
 
-    WAITING ──admit──▶ RUNNING ──finish──▶ FINISHED
-                 ▲          │
-                 └──evict───┘   (page-pool pressure)
+    WAITING ──admit──▶ PREFILLING ──last chunk──▶ RUNNING ──finish──▶ FINISHED
+                 ▲          │                        │
+                 └──────────┴────────evict───────────┘   (page-pool pressure)
 
 Admission is FIFO with head-of-line blocking: the head request joins as
-soon as a slot is free and its *prefill* pages fit; decode pages are
-appended on demand as a sequence crosses page boundaries.  When the pool
-cannot grow a running sequence, the youngest running sequence is evicted
-(pages freed, generated tokens discarded, re-queued at the head) —
-greedy decoding regenerates the same tokens on re-admission, so eviction
-trades work for memory without changing output.
+soon as a slot is free and its *prefill* pages fit.  An admitted
+sequence prefills its prompt in fixed-size chunks interleaved with the
+decode steps of the running slots (:meth:`Scheduler.plan_prefill`
+budgets the chunk tokens per engine step, Sarathi-style), then joins
+the decode batch; decode pages are appended on demand as it crosses
+page boundaries.  When the pool cannot grow a running sequence, the
+youngest slotted sequence (prefilling or running) is evicted — pages
+freed, progress discarded, re-queued ahead of everything that arrived
+after it.  Greedy decoding regenerates the same tokens on re-admission,
+so eviction trades work for memory without changing output.
 """
 
 from __future__ import annotations
@@ -41,6 +45,7 @@ class Request:
 
 class SeqState(enum.Enum):
     WAITING = "waiting"
+    PREFILLING = "prefilling"
     RUNNING = "running"
     FINISHED = "finished"
 
@@ -54,7 +59,9 @@ class Sequence:
     slot: int | None = None
     pages: list[int] = dataclasses.field(default_factory=list)
     generated: list[int] = dataclasses.field(default_factory=list)
+    arrival: int = -1                # add() order (re-queue priority)
     admitted_at: int = -1            # admission order (eviction priority)
+    prefilled: int = 0               # prompt tokens already in the pool
     finish_reason: str | None = None
     n_evictions: int = 0
 
@@ -79,6 +86,7 @@ class Scheduler:
         self.running: dict[int, Sequence] = {}
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() → slot 0 first
         self._admissions = 0
+        self._arrivals = 0
         self.n_preemptions = 0
 
     # -- queue ------------------------------------------------------------
@@ -97,7 +105,8 @@ class Scheduler:
             raise ValueError(
                 f"request {request.id}: needs {self.cache.pages_for(need)} "
                 f"pages, pool has {self.cache.usable_pages}")
-        seq = Sequence(request=request)
+        seq = Sequence(request=request, arrival=self._arrivals)
+        self._arrivals += 1
         self.waiting.append(seq)
         return seq
 
@@ -107,7 +116,12 @@ class Scheduler:
     # -- admission (join) -------------------------------------------------
 
     def try_admit(self) -> Sequence | None:
-        """Admit the head request if a slot and its prefill pages fit."""
+        """Admit the head request if a slot and its prefill pages fit.
+
+        The admitted sequence enters PREFILLING: it owns a slot and its
+        prompt pages, but joins the decode batch only once
+        :meth:`on_prefill_chunk` has walked the whole prompt.
+        """
         if not self.waiting or not self._free_slots:
             return None
         seq = self.waiting[0]
@@ -119,11 +133,66 @@ class Scheduler:
         self.waiting.popleft()
         seq.pages = pages
         seq.slot = self._free_slots.pop()
-        seq.state = SeqState.RUNNING
+        seq.state = SeqState.PREFILLING
+        seq.prefilled = 0
         seq.admitted_at = self._admissions
         self._admissions += 1
         self.running[seq.slot] = seq
         return seq
+
+    # -- chunked prefill (Sarathi-style interleaving) ----------------------
+
+    def prefilling(self) -> list[Sequence]:
+        """Slotted sequences still walking their prompt, admission order."""
+        return sorted((s for s in self.running.values()
+                       if s.state is SeqState.PREFILLING),
+                      key=lambda s: s.admitted_at)
+
+    def decode_slots(self) -> dict[int, Sequence]:
+        """slot → sequence for the decode batch (RUNNING only)."""
+        return {slot: s for slot, s in self.running.items()
+                if s.state is SeqState.RUNNING}
+
+    def plan_prefill(self, chunk: int, budget: int
+                     ) -> list[tuple[Sequence, int]]:
+        """Chunk assignments for one engine step under a token budget.
+
+        Admission-ordered prefilling sequences receive chunks of up to
+        ``chunk`` prompt tokens until ``budget`` tokens are planned; at
+        least one chunk is always planned when anything is prefilling,
+        so prefill cannot starve.  The budget is what keeps a long
+        prompt from head-of-line-stalling the decode slots: the engine
+        runs this plan, then a decode step, every step.
+        """
+        if chunk < 1:
+            raise ValueError(f"prefill chunk {chunk} < 1")
+        plan: list[tuple[Sequence, int]] = []
+        remaining = budget
+        for seq in self.prefilling():
+            done = seq.prefilled
+            while done < seq.prompt_len and (remaining > 0 or not plan):
+                n = min(chunk, seq.prompt_len - done)
+                plan.append((seq, n))
+                done += n
+                remaining -= n
+            if remaining <= 0 and plan:
+                break
+        return plan
+
+    def on_prefill_chunk(self, seq: Sequence, n: int) -> bool:
+        """Record ``n`` prompt tokens entering the pool; True when the
+        prompt is complete (the sequence then joins the decode batch)."""
+        if seq.state is not SeqState.PREFILLING:
+            raise ValueError(f"request {seq.request.id} is not prefilling")
+        seq.prefilled += n
+        if seq.prefilled > seq.prompt_len:
+            raise ValueError(
+                f"request {seq.request.id}: prefilled {seq.prefilled} past "
+                f"prompt length {seq.prompt_len}")
+        if seq.prefilled == seq.prompt_len:
+            seq.state = SeqState.RUNNING
+            return True
+        return False
 
     # -- decode-time page growth (with eviction) --------------------------
 
@@ -142,7 +211,7 @@ class Scheduler:
         evicted: list[Sequence] = []
         for seq in sorted(self.running.values(), key=lambda s: s.admitted_at):
             if seq.state is not SeqState.RUNNING:
-                continue  # evicted while growing an older sequence
+                continue  # prefilling, or evicted while growing an older seq
             need = self.cache.pages_for(seq.total_tokens) - len(seq.pages)
             while need > 0 and seq.state is SeqState.RUNNING:
                 try:
@@ -152,24 +221,40 @@ class Scheduler:
                 except OutOfPagesError:
                     victim = max(
                         (s for s in self.running.values()
-                         if s.state is SeqState.RUNNING),
+                         if s.state in (SeqState.RUNNING,
+                                        SeqState.PREFILLING)),
                         key=lambda s: s.admitted_at)
                     self._evict(victim)
                     evicted.append(victim)
         return grown, evicted
 
     def _evict(self, seq: Sequence) -> None:
-        """Free a running sequence and re-queue it at the head."""
+        """Free a slotted sequence and re-queue it in arrival order.
+
+        Re-queue position is by ``arrival`` (add() order), NOT a bare
+        ``appendleft``: with several evictions in one
+        :meth:`grow_for_decode` pass, head-pushes would re-enter the
+        victims in reverse eviction order and let a later arrival jump
+        an earlier one — admission must stay FIFO in arrival order no
+        matter how many victims one pass produces.
+        """
         self.allocator.free(seq.pages)
         self.running.pop(seq.slot)
         self._free_slots.append(seq.slot)
         seq.pages = []
         seq.generated = []
+        seq.prefilled = 0
         seq.slot = None
         seq.state = SeqState.WAITING
         seq.n_evictions += 1
         self.n_preemptions += 1
-        self.waiting.appendleft(seq)
+        pos = 0
+        for pos, w in enumerate(self.waiting):  # noqa: B007
+            if w.arrival > seq.arrival:
+                break
+        else:
+            pos = len(self.waiting)
+        self.waiting.insert(pos, seq)
 
     # -- completion (exit) ------------------------------------------------
 

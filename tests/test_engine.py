@@ -72,19 +72,88 @@ def test_scheduler_rejects_oversized_requests():
         s.add(Request(id=2, prompt=(), max_new_tokens=2))
 
 
+def _finish_prefill(s, seq):
+    """Walk a freshly admitted sequence's prompt in one chunk."""
+    assert seq.state is SeqState.PREFILLING
+    assert s.on_prefill_chunk(seq, seq.prompt_len)
+    assert seq.state is SeqState.RUNNING
+
+
 def test_scheduler_eviction_prefers_youngest_and_requeues_at_head():
     cfg = PagedCacheConfig(n_pages=5, page_size=4, max_pages_per_seq=4)
     s = Scheduler(cfg, n_slots=2)
     a = s.add(Request(id=0, prompt=(1,) * 8, max_new_tokens=8))   # 2 pages
     b = s.add(Request(id=1, prompt=(1,) * 8, max_new_tokens=8))   # 2 pages
     assert s.try_admit() is a and s.try_admit() is b  # pool full (4/4)
+    _finish_prefill(s, a)
+    _finish_prefill(s, b)
     # a crosses a page boundary (8 → 9 tokens) → must evict the younger b
     a.generated.append(5)
     grown, evicted = s.grow_for_decode()
     assert evicted == [b] and b.state is SeqState.WAITING
-    assert b.generated == [] and b.pages == []
+    assert b.generated == [] and b.pages == [] and b.prefilled == 0
     assert s.waiting[0] is b  # re-queued at the head
     assert grown == [a] and len(a.pages) == 3
+
+
+def test_scheduler_prefilling_state_and_chunk_plan():
+    cfg = PagedCacheConfig(n_pages=20, page_size=4, max_pages_per_seq=8)
+    s = Scheduler(cfg, n_slots=2)
+    a = s.add(Request(id=0, prompt=(1,) * 11, max_new_tokens=2))
+    b = s.add(Request(id=1, prompt=(2,) * 3, max_new_tokens=2))
+    assert s.try_admit() is a and s.try_admit() is b
+    assert a.state is SeqState.PREFILLING and b.state is SeqState.PREFILLING
+    assert s.decode_slots() == {}          # nobody decodes yet
+    assert s.prefilling() == [a, b]        # admission order
+    # budget of one chunk: only a progresses this step
+    plan = s.plan_prefill(chunk=4, budget=4)
+    assert plan == [(a, 4)]
+    assert not s.on_prefill_chunk(a, 4)
+    # a bigger budget drains a (4+3 left) and starts b, in order
+    plan = s.plan_prefill(chunk=4, budget=12)
+    assert plan == [(a, 4), (a, 3), (b, 3)]
+    for seq, n in plan:
+        s.on_prefill_chunk(seq, n)
+    assert a.state is SeqState.RUNNING and b.state is SeqState.RUNNING
+    assert s.decode_slots() == {a.slot: a, b.slot: b}
+    assert s.plan_prefill(chunk=4, budget=4) == []
+
+
+def test_scheduler_multi_eviction_requeues_in_arrival_order():
+    """Two evictions in ONE grow_for_decode pass must re-enter the
+    waiting queue in arrival (add) order — and never jump a request
+    that arrived before them, regardless of eviction order."""
+    cfg = PagedCacheConfig(n_pages=5, page_size=4, max_pages_per_seq=4)
+    s = Scheduler(cfg, n_slots=3)
+    a = s.add(Request(id=0, prompt=(1,) * 8, max_new_tokens=8))   # 2 pages
+    b = s.add(Request(id=1, prompt=(1,) * 4, max_new_tokens=8))   # 1 page
+    c = s.add(Request(id=2, prompt=(1,) * 4, max_new_tokens=8))   # 1 page
+    d = s.add(Request(id=3, prompt=(1,) * 4, max_new_tokens=4))   # waits
+    for seq in (a, b, c):
+        assert s.try_admit() is seq
+        _finish_prefill(s, seq)
+    assert s.try_admit() is None  # no free slot for d
+    # pool full (4/4).  a and b both cross a page boundary: growing a
+    # evicts c; growing b cannot steal from the older a, so b evicts
+    # itself — two evictions in one pass.
+    a.generated.append(5)
+    b.generated.append(6)
+    grown, evicted = s.grow_for_decode()
+    assert evicted == [c, b] and grown == [a]
+    # re-queue is arrival-FIFO: b (arrival 1) ahead of c (arrival 2),
+    # both ahead of d only because d arrived after them
+    assert [w.request.id for w in s.waiting] == [1, 2, 3]
+    # … and robust to ANY eviction order, not just youngest-first:
+    s2 = Scheduler(cfg, n_slots=3)
+    seqs = [s2.add(Request(id=i, prompt=(1,) * 4, max_new_tokens=4))
+            for i in range(3)]
+    for seq in seqs:
+        assert s2.try_admit() is seq
+        _finish_prefill(s2, seq)
+    s2._evict(seqs[0])   # oldest first — reverse of the victim policy
+    s2._evict(seqs[2])
+    s2._evict(seqs[1])
+    assert [w.request.id for w in s2.waiting] == [0, 1, 2]
 
 
 def test_scheduler_eos_finish():
@@ -185,6 +254,48 @@ def test_engine_eos_and_single_token_requests(small_lm):
     assert out[r_one].tokens[0] == probe[0].tokens[0]
 
 
+def test_engine_stats_synced_every_step_and_split_by_kind(small_lm):
+    """stats.preemptions tracks the scheduler on EVERY step — including
+    steps where all slots drain — and prefill-chunk steps are counted
+    separately from decode steps."""
+    model, params = small_lm
+    run = _run_cfg("exact")
+    cache = PagedCacheConfig(n_pages=10, page_size=8, max_pages_per_seq=8)
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, 128, size=l).tolist(), m)
+            for l, m in [(20, 30), (16, 30), (12, 20)]]
+    eng = ServingEngine(model, params, run, n_slots=3, cache=cache,
+                        prefill_chunk=8)
+    for p, m in reqs:
+        eng.add_request(p, m)
+    while eng.scheduler.has_work():
+        eng.step()
+        # the sync must hold mid-flight, not just after run() drains
+        assert eng.stats.preemptions == eng.scheduler.n_preemptions
+    assert eng.stats.preemptions > 0
+    # chunk steps ≠ decode steps; each prompt is ceil(len/chunk) chunks
+    # plus whatever evictions forced to be replayed
+    min_chunks = sum(-(-len(p) // 8) for p, _ in reqs)
+    assert eng.stats.prefill_steps >= min_chunks
+    assert eng.stats.steps > 0
+    assert eng.stats.prompt_tokens >= sum(len(p) for p, _ in reqs)
+    # produced ≥ useful: evictions replay work, never lose it
+    assert eng.stats.decode_tokens + eng.stats.prefill_tokens \
+        >= sum(m for _, m in reqs)
+
+
+def test_engine_ttft_recorded(small_lm):
+    model, params = small_lm
+    run = _run_cfg("exact")
+    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE,
+                        prefill_chunk=4)
+    rng = np.random.default_rng(6)
+    out = eng.run([(rng.integers(0, 128, size=13).tolist(), 3),
+                   (rng.integers(0, 128, size=5).tolist(), 2)])
+    assert all(r.ttft_s is not None and r.ttft_s >= 0.0
+               for r in out.values())
+
+
 def test_engine_no_rejit_across_steps(small_lm):
     """The decode step compiles once: mixed lengths, joins and exits all
     reuse the same fixed-shape program."""
@@ -195,3 +306,5 @@ def test_engine_no_rejit_across_steps(small_lm):
     eng.run(_mixed_requests(rng, n=4))
     traces = eng._decode_fn._cache_size()
     assert traces == 1, f"decode retraced {traces} times"
+    traces = eng._chunk_fn._cache_size()
+    assert traces == 1, f"prefill chunk retraced {traces} times"

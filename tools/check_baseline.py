@@ -17,10 +17,15 @@ re-record with ``--update``, commit — CI then holds the new line.
 over unchanged: they are set by hand, conservatively, because a suite's
 exact count can differ per environment (e.g. the hypothesis property
 collapses to fewer fixed-seed cases when the dev extra is absent).
+``--set-suite-floor NAME=N`` (repeatable, combines with ``--update``)
+pins or raises a floor — the way a new critical test file enters the
+ratchet.
 
   PYTHONPATH=src python -m pytest -q --junitxml=junit.xml
   python tools/check_baseline.py junit.xml
   python tools/check_baseline.py junit.xml --update   # re-record
+  python tools/check_baseline.py junit.xml --update \
+      --set-suite-floor test_chunked_prefill=15
 """
 
 from __future__ import annotations
@@ -74,17 +79,33 @@ def main() -> int:
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
     ap.add_argument("--update", action="store_true",
                     help="re-record the baseline from this report")
+    ap.add_argument("--set-suite-floor", action="append", default=[],
+                    metavar="NAME=N",
+                    help="pin a per-suite passed floor (with --update); "
+                         "refuses to lower an existing floor")
     args = ap.parse_args()
 
     current = read_junit(args.junit_xml)
     path = pathlib.Path(args.baseline)
     prior = json.loads(path.read_text()) if path.exists() else {}
     if args.update:
-        if prior.get("suites"):  # hand-set floors carry over unchanged
-            current["suites"] = prior["suites"]
+        suites = dict(prior.get("suites", {}))  # floors carry over unchanged
+        for spec in args.set_suite_floor:
+            name, _, floor_s = spec.partition("=")
+            if not name or not floor_s.isdigit():
+                ap.error(f"--set-suite-floor wants NAME=N, got {spec!r}")
+            floor = int(floor_s)
+            if floor < suites.get(name, 0):
+                ap.error(f"refusing to lower floor '{name}': "
+                         f"{suites[name]} -> {floor} (ratchets only rise)")
+            suites[name] = floor
+        if suites:
+            current["suites"] = suites
         path.write_text(json.dumps(current, indent=2) + "\n")
         print(f"baseline updated: {current}")
         return 0
+    if args.set_suite_floor:
+        ap.error("--set-suite-floor requires --update")
 
     baseline = prior
     print(f"current : {current}")
