@@ -188,7 +188,9 @@ class RunConfig:
     softmax_policy: SoftmaxPolicy = EXACT          # serving softmax
     router_policy: SoftmaxPolicy = EXACT
     attention_backend: str = "blocked"             # naive | blocked | pallas
-    paged_backend: str = "auto"                    # paged decode: auto | pallas | dense
+    paged_backend: str = "auto"                    # paged attention (decode +
+                                                   # prefill chunks):
+                                                   # auto | pallas | dense
     scan_layers: bool = True                       # scan periods (real prog)
     remat: bool = True
     microbatch: int = 1                            # grad-accumulation steps

@@ -3,11 +3,12 @@ attention) plus the exact-softmax baseline:
 
   lut_softmax/     row-wise LUT softmax (REXP + 2D-LUT)
   lut_attention/   fused flash-style attention with LUT softmax, and the
-                   paged-decode kernel (``paged_decode.py``) that serves
-                   the continuous-batching engine straight off the
+                   paged kernels (``paged_decode.py`` for single-token
+                   decode, ``paged_prefill.py`` for prompt chunks) that
+                   serve the continuous-batching engine straight off the
                    page-major KV pool ``(n_pages, page_size, KVH, Dh)``
                    via scalar-prefetched block tables — no contiguous
-                   per-slot KV gather on the kernel path
+                   per-slot KV gather on the kernel path, either phase
   flash_attention/ exact online-softmax flash attention
 
 Each package ships <name>.py (pl.pallas_call + BlockSpec), ops.py (the
@@ -15,10 +16,14 @@ jit'd public wrapper with XLA fallback paths) and ref.py (pure-jnp
 oracle).  Kernels are validated in interpret mode on CPU; the multi-pod
 dry-run lowers the XLA paths (Mosaic needs a real TPU backend).
 
-Paged-decode dispatch (``ops.lut_attention_paged_decode``): ``auto``
-runs the Pallas kernel on TPU and the dense gather-from-block-table
-reference elsewhere (the scalar-prefetch grid spec is Mosaic/TPU-only);
-``pallas`` forces the kernel (interpret mode off-TPU — the CI parity
-configuration); ``dense`` forces the reference.  All paths share one
-integer LUT pipeline and produce the same tokens.
+Paged-attention dispatch (``ops.lut_attention_paged_decode`` and
+``ops.lut_attention_paged_prefill`` — ONE matrix covers both; the
+canonical statement lives in ``lut_attention/ops.py`` and a test pins
+the docs to it): ``auto`` runs the Pallas kernel on TPU and the dense
+gather-from-block-table reference elsewhere, GPU included (the
+scalar-prefetch grid spec is Mosaic/TPU-only, so GPU falls back to
+dense until a Mosaic-GPU port lands); ``pallas`` forces the kernel —
+compiled on TPU, interpret mode off-TPU (the CI parity configuration,
+never a silent stand-in); ``dense`` forces the reference.  All paths
+share one integer LUT pipeline and produce the same tokens.
 """

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+NEG_INF = float("-inf")
+
 #: conservative per-core VMEM working-set budget (bytes) used to pick block
 #: shapes; TPU v5e has ~128 MiB VMEM but we budget well under it so double
 #: buffering and spills have room.
@@ -73,6 +75,57 @@ def kernel_lookup(lut: Array, idx: Array, impl: str) -> Array:
     if impl == "gather":
         return jnp.take(lut, idx, axis=0)
     raise ValueError(f"unknown in-kernel lookup impl {impl!r}")
+
+
+def policy_e_terms(s: Array, m_row: Array, lut_main: Array, method: str,
+                   exp_step: float, index_mode: str, lookup: str) -> Array:
+    """Per-element numerators given the global row max ``m_row`` (R,),
+    shared by the paged-decode and paged-prefill pass-2/3 kernels.
+
+    ``s`` (R, C) are tail-masked f32 logits;
+    exact  → f32 ``exp(s − m)``;
+    rexp   → int  ``LUT_1/e[bin(m − s)]``;
+    lut2d  → int  ``LUT_exp[bin((m − s)/step)]``.
+    Masked (−inf) logits yield hard zeros, never the terminal LUT entry.
+    """
+    finite = jnp.isfinite(s)
+    if method == "exact":
+        return jnp.where(finite, jnp.exp(s - m_row[:, None]), 0.0)
+    n = lut_main.shape[0]
+    d = m_row[:, None] - s
+    if method == "lut2d":
+        from repro.core.lut_softmax import inv_scale
+        d = d * inv_scale(exp_step)
+    d = jnp.where(finite, d, float(n - 1))
+    rnd = jnp.round if index_mode == "round" else jnp.floor
+    idx = jnp.clip(rnd(d).astype(jnp.int32), 0, n - 1)
+    return jnp.where(finite, kernel_lookup(lut_main, idx, lookup), 0)
+
+
+def policy_kernel_tables(method: str, tables):
+    """Device-ready LUT operands for the paged kernels' pallas_call chain.
+
+    Returns ``(lut_main, lut_aux, exp_step, qmax, scale_ex, scale_sum)``
+    — the main table is shipped ``(1, N)`` so a single BlockSpec shape
+    covers every policy; ``exact`` flows 1-entry placeholders through the
+    same signature so the three passes share one code path.
+    """
+    from repro.core.lut_builder import Lut2DTables, RexpTables
+    if method == "rexp":
+        assert isinstance(tables, RexpTables)
+        lut_main = jnp.asarray(tables.lut_recip_exp, jnp.int32)[None, :]
+        lut_aux = jnp.asarray(tables.lut_alpha, jnp.int32)[None, :]
+        return lut_main, lut_aux, 1.0, tables.precision.qmax, 0.0, 0.0
+    if method == "lut2d":
+        assert isinstance(tables, Lut2DTables)
+        lut_main = jnp.asarray(tables.lut_exp, jnp.int32)[None, :]
+        lut_aux = jnp.asarray(tables.lut_sigma, jnp.int32)
+        return (lut_main, lut_aux, tables.exp_step, tables.precision.qmax,
+                tables.scale_ex, tables.scale_sum)
+    if method == "exact":
+        return (jnp.zeros((1, 1), jnp.int32), jnp.zeros((1, 1), jnp.int32),
+                1.0, 1, 0.0, 0.0)
+    raise ValueError(f"unsupported paged-kernel method {method!r}")
 
 
 def rexp_sigma(e_int: Array, s_row: Array, lut_alpha: Array, qmax: int,

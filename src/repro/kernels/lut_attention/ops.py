@@ -11,18 +11,29 @@ Three execution paths, one semantics:
   tests, and the roofline probes (XLA's cost_analysis counts loop bodies
   once, so probes must avoid scans — see EXPERIMENTS.md §Methodology).
 
-The continuous-batching serving engine decodes through
-:func:`lut_attention_paged_decode`, which dispatches between the fused
-Pallas paged kernel (TPU — K/V stream straight from the page pool
-through per-slot block tables, no contiguous gather) and the dense
-reference (CPU/GPU, and interpret-mode CI — gather-from-block-table,
-materialized logits).  Both produce the same per-key numerics.
+The continuous-batching serving engine attends through the two *paged*
+dispatchers — :func:`lut_attention_paged_decode` (single-token decode)
+and :func:`lut_attention_paged_prefill` (prompt chunks; the chunk's K/V
+are already in the pool, prior keys are read through the same block
+tables, one compiled program for every prompt length).  Both follow ONE
+dispatch matrix (the single source of truth — README and
+``kernels/__init__`` restate it, and ``tests/test_paged_prefill_kernel``
+asserts the three stay in sync):
 
-Chunked paged *prefill* goes through :func:`lut_attention_paged_prefill`:
-the chunk's K/V are already in the pool, prior keys are read through the
-same block tables, and the chunk's queries run either the blocked path
-(per-row traced ``kv_len`` + ``q_start`` cursors) or the materialized
-oracle — one compiled program for every prompt length.
+    knob (``paged_backend``)   TPU                   CPU / GPU
+    ``auto``                   fused Pallas kernel   dense reference
+    ``pallas``                 fused Pallas kernel   kernel, interpret mode
+    ``dense``                  dense reference       dense reference
+
+The fused kernels (``paged_decode.py`` / ``paged_prefill.py``) stream
+K/V pages straight from the pool through scalar-prefetched block tables
+— no contiguous gather; their scalar-prefetch grid spec is
+Mosaic/TPU-only, so ``auto`` on GPU serves through the dense reference
+until a Mosaic-GPU port lands.  The dense reference
+(gather-from-block-table, materialized logits) runs identically
+everywhere and is the CI parity oracle.  ``pallas`` is never a silent
+stand-in: off-TPU it runs the real kernel under the interpreter.  All
+paths share one integer LUT pipeline and produce the same tokens.
 """
 
 from __future__ import annotations
@@ -39,6 +50,7 @@ from repro.core import lut_softmax as _core
 from repro.kernels.lut_attention import ref as _ref
 from repro.kernels.lut_attention.lut_attention import lut_attention_pallas
 from repro.kernels.lut_attention.paged_decode import paged_decode_attention
+from repro.kernels.lut_attention.paged_prefill import paged_prefill_attention
 
 Array = jax.Array
 
@@ -388,6 +400,45 @@ def lut_attention_prefill_varlen(
     return _grouped_pv(_policy_softmax(s, policy), v)
 
 
+def _resolve_paged(backend: str, *, kind: str, dense: str,
+                   passthrough: tuple[str, ...]) -> str:
+    """The one dispatch matrix in code (see the module docstring): the
+    decode/prefill resolvers differ only in the name of their dense
+    flavor and which explicit paths they pass through."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else dense
+    if backend == "pallas":
+        return ("pallas" if jax.default_backend() == "tpu"
+                else "pallas_interpret")
+    if backend == "dense":
+        return dense
+    if backend in passthrough:
+        return backend
+    raise ValueError(f"unknown paged {kind} backend {backend!r}")
+
+
+def resolve_paged_prefill_backend(backend: str = "auto") -> str:
+    """Resolve the paged-prefill dispatch knob to an executable path.
+
+    Same matrix as :func:`resolve_paged_backend` (the decode side):
+
+    * ``auto``   → ``pallas`` on TPU, the ``naive`` oracle elsewhere
+      (the kernel's scalar-prefetch grid spec is Mosaic/TPU-only — GPU
+      serves through the dense reference until a Mosaic-GPU port lands,
+      and CPU CI always does);
+    * ``pallas`` → the fused kernel; off-TPU it runs in interpret mode
+      (``pallas_interpret`` — the CI parity configuration, never a
+      silent stand-in);
+    * ``dense``  → the gathered ``naive`` oracle, everywhere (alias so
+      ``RunConfig.paged_backend`` values flow through unchanged);
+    * ``naive`` / ``blocked`` → the explicit dense flavors (materialized
+      oracle / blocked-XLA scan over the gathered view).
+    """
+    return _resolve_paged(backend, kind="prefill", dense="naive",
+                          passthrough=("naive", "blocked",
+                                       "pallas_interpret"))
+
+
 def lut_attention_paged_prefill(
     q: Array,               # (B, C, H·D)-projected chunk queries (B, H, C, D)
     k_pages: Array,         # (num_pages, page_size, KVH, D) shared pool
@@ -398,7 +449,7 @@ def lut_attention_paged_prefill(
     policy: SoftmaxPolicy,
     *,
     scale: float | None = None,
-    backend: str = "naive",  # 'naive' | 'blocked' | 'pallas'
+    backend: str = "naive",  # 'auto' | 'pallas' | 'dense'|'naive' | 'blocked'
     q_chunk: int = 512,
     k_chunk: int = 1024,
 ) -> Array:
@@ -407,25 +458,31 @@ def lut_attention_paged_prefill(
     the pool *is* the only KV **storage** (no contiguous per-request
     cache is ever written).
 
-    The read side assembles a transient block-table view per chunk
-    (``gather_pages``, as the dense paged-*decode* reference does per
-    step) and runs the blocked LUT path with per-row ``kv_len`` /
-    ``q_start`` (``backend='blocked'|'pallas'``) or the materialized
-    oracle (``'naive'`` — bitwise the lockstep semantics, the parity
-    configuration).  That per-chunk gather costs O(L/C · max_context)
-    reads over a prompt — acceptable as the reference path; a fused
-    Pallas prefill kernel streaming pages like ``paged_decode`` would
-    remove it.  One compiled program serves every prompt length: all
-    shapes are fixed by (C, block-table width); only the cursors are
-    traced.
+    Dispatches per :func:`resolve_paged_prefill_backend` (the module
+    docstring's matrix).  On the ``pallas`` path the fused kernel
+    (``paged_prefill.py``) streams K/V pages straight from the pool
+    through scalar-prefetched block tables — ``gather_pages`` is never
+    called there.  The dense flavors assemble a transient block-table
+    view per chunk (as the dense paged-*decode* reference does per step)
+    and run the materialized oracle (``'naive'`` — bitwise the lockstep
+    semantics, the parity configuration) or the blocked LUT path with
+    per-row ``kv_len`` / ``q_start``; that per-chunk gather costs
+    O(L/C · max_context) reads over a prompt, which is exactly what the
+    kernel path removes.  One compiled program serves every prompt
+    length: all shapes are fixed by (C, block-table width); only the
+    cursors are traced.
     """
-    if backend not in ("naive", "blocked", "pallas"):
-        raise ValueError(f"unknown prefill attention backend {backend!r}")
+    resolved = resolve_paged_prefill_backend(backend)
+    if resolved.startswith("pallas"):
+        return paged_prefill_attention(
+            q, k_pages, v_pages, block_tables, q_start, kv_lens,
+            _tables_for(policy), method=policy.impl, scale=scale,
+            index_mode=policy.index_mode,
+            lookup="gather" if policy.lookup_impl == "gather" else "select",
+            interpret=resolved == "pallas_interpret")
     k_seq = gather_pages(k_pages, block_tables)
     v_seq = gather_pages(v_pages, block_tables)
-    if backend in ("blocked", "pallas"):
-        # pallas has no paged-prefill kernel yet; the blocked XLA path is
-        # its serving-shape stand-in (same fused-requant semantics)
+    if resolved == "blocked":
         return lut_attention_blocked(q, k_seq, v_seq, policy, causal=True,
                                      scale=scale, kv_len=kv_lens,
                                      q_start=q_start, q_chunk=q_chunk,
@@ -478,22 +535,20 @@ def gather_pages(pages: Array, block_tables: Array) -> Array:
 def resolve_paged_backend(backend: str = "auto") -> str:
     """Resolve the paged-decode dispatch knob to an executable path.
 
+    Same matrix as :func:`resolve_paged_prefill_backend` (the prefill
+    side) — the module docstring states it once for both kernels:
+
     * ``auto``   → ``pallas`` on TPU, ``dense`` elsewhere (the kernel's
       scalar-prefetch grid spec is Mosaic/TPU-only — GPU serves through
       the dense reference until a Mosaic-GPU port lands, and CPU CI
       always does);
     * ``pallas`` → the fused kernel; off-TPU it runs in interpret mode
-      (``pallas_interpret`` — the CI parity configuration);
+      (``pallas_interpret`` — the CI parity configuration, never a
+      silent stand-in);
     * ``dense``  → gather-from-block-table reference, everywhere.
     """
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "dense"
-    if backend == "pallas":
-        return ("pallas" if jax.default_backend() == "tpu"
-                else "pallas_interpret")
-    if backend in ("dense", "pallas_interpret"):
-        return backend
-    raise ValueError(f"unknown paged decode backend {backend!r}")
+    return _resolve_paged(backend, kind="decode", dense="dense",
+                          passthrough=("dense", "pallas_interpret"))
 
 
 def lut_attention_paged_decode(

@@ -54,11 +54,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.lut_builder import Lut2DTables, RexpTables
 from repro.core.lut_softmax import inv_scale
-from repro.kernels.common import kernel_lookup, lut2d_sigma_int, rexp_sigma
+from repro.kernels.common import (NEG_INF, lut2d_sigma_int, policy_e_terms,
+                                  policy_kernel_tables, rexp_sigma)
 
 Array = jax.Array
-
-NEG_INF = float("-inf")
 
 
 # ---------------------------------------------------------------------------
@@ -81,27 +80,6 @@ def _page_logits(q_ref, k_ref, kl_ref, scale, page_size):
                             preferred_element_type=jnp.float32) * scale
     pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     return jnp.where(pos < kl_ref[b], s, NEG_INF)
-
-
-def _e_terms(s, m, lut_main, method, exp_step, index_mode, lookup):
-    """Per-element numerators given the global row max ``m`` (G,).
-
-    exact  → f32 ``exp(s − m)``;
-    rexp   → int  ``LUT_1/e[bin(m − s)]``;
-    lut2d  → int  ``LUT_exp[bin((m − s)/step)]``.
-    Masked (−inf) logits yield hard zeros, never the terminal LUT entry.
-    """
-    finite = jnp.isfinite(s)
-    if method == "exact":
-        return jnp.where(finite, jnp.exp(s - m[:, None]), 0.0)
-    n = lut_main.shape[0]
-    d = m[:, None] - s
-    if method == "lut2d":
-        d = d * inv_scale(exp_step)
-    d = jnp.where(finite, d, float(n - 1))
-    rnd = jnp.round if index_mode == "round" else jnp.floor
-    idx = jnp.clip(rnd(d).astype(jnp.int32), 0, n - 1)
-    return jnp.where(finite, kernel_lookup(lut_main, idx, lookup), 0)
 
 
 # ---------------------------------------------------------------------------
@@ -133,7 +111,8 @@ def _pg_sum_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, lut_ref, s_ref, *,
     s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
     m = m_ref[0, 0]
     m = jnp.where(jnp.isfinite(m), m, 0.0)
-    e = _e_terms(s, m, lut_ref[0, :], method, exp_step, index_mode, lookup)
+    e = policy_e_terms(s, m, lut_ref[0, :], method, exp_step, index_mode,
+                       lookup)
     s_ref[0, 0] += jnp.sum(e.astype(jnp.float32), axis=-1)
 
 
@@ -156,8 +135,8 @@ def _pg_weight_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, m_ref, s_ref,
     s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
     m = m_ref[0, 0]
     m = jnp.where(jnp.isfinite(m), m, 0.0)
-    e = _e_terms(s, m, lut_main_ref[0, :], method, exp_step, index_mode,
-                 lookup)
+    e = policy_e_terms(s, m, lut_main_ref[0, :], method, exp_step,
+                       index_mode, lookup)
     s_tot = s_ref[0, 0]  # (G,) global Σ from pass 2
 
     if method == "exact":
@@ -249,28 +228,8 @@ def paged_decode_attention(
             num_scalar_prefetch=2, grid=grid,
             in_specs=in_specs, out_specs=out_specs)
 
-    if method == "rexp":
-        assert isinstance(tables, RexpTables)
-        lut_main = jnp.asarray(tables.lut_recip_exp, jnp.int32)[None, :]
-        lut_aux = jnp.asarray(tables.lut_alpha, jnp.int32)[None, :]
-        exp_step = 1.0
-        qmax, scale_ex, scale_sum = tables.precision.qmax, 0.0, 0.0
-    elif method == "lut2d":
-        assert isinstance(tables, Lut2DTables)
-        lut_main = jnp.asarray(tables.lut_exp, jnp.int32)[None, :]
-        lut_aux = jnp.asarray(tables.lut_sigma, jnp.int32)
-        exp_step = tables.exp_step
-        qmax, scale_ex, scale_sum = (tables.precision.qmax, tables.scale_ex,
-                                     tables.scale_sum)
-    elif method == "exact":
-        # table refs still flow through the pallas_call signature; use a
-        # 1-entry placeholder so the three passes share one code path
-        lut_main = jnp.zeros((1, 1), jnp.int32)
-        lut_aux = jnp.zeros((1, 1), jnp.int32)
-        exp_step = 1.0
-        qmax, scale_ex, scale_sum = 1, 0.0, 0.0
-    else:
-        raise ValueError(f"unsupported paged-decode method {method!r}")
+    (lut_main, lut_aux, exp_step, qmax, scale_ex,
+     scale_sum) = policy_kernel_tables(method, tables)
 
     geom = dict(scale=scale, page_size=page_size)
 

@@ -1,0 +1,289 @@
+"""Fused paged-prefill attention: LUT softmax in-kernel over block tables.
+
+The chunked-prefill half of the continuous-batching hot path.  Each slot
+carries a ``C``-token prompt *chunk* whose K/V were already scattered
+into the shared page pool ``(num_pages, page_size, KVH, Dh)``; the
+chunk's queries sit at absolute positions ``[q_start, q_start + C)`` and
+attend causally to every key ``< kv_lens`` of their own sequence.  The
+dense fallback first *gathers* each slot's pages into a contiguous
+``(B, KVH, Lk, D)`` view — an O(L/C · max_context) read per prompt that
+``ops.py`` documented as the last densification on the serving path.
+This kernel removes it by streaming pages straight from the pool, the
+same way ``paged_decode.py`` does:
+
+* the innermost grid axis walks a slot's **block table**; the K/V block
+  index maps read the physical page id from a scalar-prefetched table
+  (``pltpu.PrefetchScalarGridSpec``), so each grid step DMAs exactly one
+  page into VMEM — the contiguous per-slot view never exists;
+* per-slot ``kv_lens`` (valid keys incl. this chunk) and ``q_start``
+  (chunk cursor) are also scalar-prefetched: key position ``pos`` is
+  visible to chunk row ``i`` iff ``pos < kv_lens[b]`` and
+  ``pos ≤ q_start[b] + i`` — exactly the mask of the varlen oracle, so
+  partial last pages, null-page placeholders, *and* the causal frontier
+  inside the chunk are all handled per element (structural padding rows
+  ``i ≥ chunk_lens`` compute defined-but-discarded values, identical to
+  the oracle's);
+* GQA is handled by grouping: queries arrive as ``(B, KVH, G, C, Dh)``
+  and each (slot, kv-head) grid cell serves all ``G`` query heads of
+  that KV head from one page read.
+
+Why multi-pass (same argument as ``paged_decode.py``): the paper's
+Algorithms 1/2 normalize by the *global* row max and the *global* Σe —
+piecewise-constant tables do not satisfy the online-softmax rescaling
+identity, so the page axis is swept three times with the accumulators
+resident across the sequential innermost grid dimension:
+
+  pass 1   row max    m(b,h,i)   = max_p max(q_i·K_pᵀ)           [MXU]
+  pass 2   Σ          S(b,h,i)   = Σ_p Σ(e(s, m))                [MXU+VPU]
+  pass 3   weighted V out(b,h,i) = Σ_p w(s, m, S) · V_p          [MXU]
+
+``e``/``w`` follow the policy (exact / REXP / 2D-LUT) through the shared
+in-kernel helpers (``kernels/common.py``: ``policy_e_terms``,
+``rexp_sigma``, ``lut2d_sigma_int``) — bit-identical integer pipeline to
+``core.lut_softmax``; only the final f32 V-contraction accumulates
+page-chunked instead of row-at-once.
+
+Total traffic per chunk: the live pages once per pass plus O(B·G·C·Dh)
+accumulators — no O(B·mp·ps·D) gather and no (B, H, C, Lk) logits tensor
+in HBM.  Validated in interpret mode on CPU; Mosaic lowers the same
+program on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lut_builder import Lut2DTables, RexpTables
+from repro.core.lut_softmax import inv_scale
+from repro.kernels.common import (NEG_INF, lut2d_sigma_int, policy_e_terms,
+                                  policy_kernel_tables, rexp_sigma)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# In-kernel helpers
+# ---------------------------------------------------------------------------
+
+
+def _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size):
+    """(G, C, ps) f32 logits of this (slot, kv-head, page) cell, masked.
+
+    Key positions are logical: page ``p`` of a slot covers absolute
+    positions [p·ps, (p+1)·ps).  A key at ``pos`` is visible to chunk
+    row ``i`` (absolute query position ``q_start[b] + i``) iff
+    ``pos < kv_lens[b]`` (tail / null-page mask) and
+    ``pos ≤ q_start[b] + i`` (causal frontier inside the chunk).
+    """
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, C, Dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (ps, Dh)
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    qi = qs_ref[b] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    return jnp.where((pos < kl_ref[b]) & (pos <= qi), s, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Pass 1 — global row max (online across pages)
+# ---------------------------------------------------------------------------
+
+
+def _pf_rowmax_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, *, scale,
+                      page_size):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    s = _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size)
+    m_ref[0, 0] = jnp.maximum(m_ref[0, 0], jnp.max(s, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Pass 2 — Σ numerators (online across pages)
+# ---------------------------------------------------------------------------
+
+
+def _pf_sum_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, lut_ref,
+                   s_ref, *, scale, page_size, method, exp_step, index_mode,
+                   lookup):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s = _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size)
+    g, c, ps = s.shape
+    m = m_ref[0, 0]                               # (G, C)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = policy_e_terms(s.reshape(g * c, ps), m.reshape(g * c), lut_ref[0, :],
+                       method, exp_step, index_mode, lookup)
+    s_ref[0, 0] += jnp.sum(e.astype(jnp.float32), axis=-1).reshape(g, c)
+
+
+# ---------------------------------------------------------------------------
+# Pass 3 — per-element σ · V (faithful requantization, online across pages)
+# ---------------------------------------------------------------------------
+
+
+def _pf_weight_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, v_ref, m_ref,
+                      s_ref, lut_main_ref, lut_aux_ref, o_ref, *, scale,
+                      page_size, method, qmax, exp_step, scale_ex, scale_sum,
+                      index_mode, lookup):
+    """Accumulate out += σ(s, m, S) @ V_page with the policy's per-element
+    weights — REXP re-quantizes σ_int per element (Algorithm 1 line 11),
+    2D-LUT reads LUT_σ[i(e), j(S)] (Algorithm 2), exact divides by S.
+    Rows are the flattened (G, C) chunk: the σ helpers are row-generic."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size)
+    g, c, ps = s.shape
+    m = m_ref[0, 0]
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = policy_e_terms(s.reshape(g * c, ps), m.reshape(g * c),
+                       lut_main_ref[0, :], method, exp_step, index_mode,
+                       lookup)
+    s_tot = s_ref[0, 0].reshape(g * c)  # global Σ from pass 2
+
+    if method == "exact":
+        w = e / jnp.maximum(s_tot, jnp.finfo(jnp.float32).tiny)[:, None]
+    elif method == "rexp":
+        w = rexp_sigma(e, s_tot, lut_aux_ref[0, :], qmax, index_mode,
+                       lookup) * inv_scale(qmax)
+    else:  # lut2d
+        sigma_int = lut2d_sigma_int(e, s_tot, lut_aux_ref[...], qmax,
+                                    scale_ex, scale_sum, index_mode)
+        w = sigma_int.astype(jnp.float32) * inv_scale(qmax)
+
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dh)
+    o_ref[0, 0] += jax.lax.dot_general(
+        w.astype(jnp.float32), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(g, c, -1)
+
+
+# ---------------------------------------------------------------------------
+# Host-side launcher
+# ---------------------------------------------------------------------------
+
+
+def _pool_spec(page_size, dh):
+    """One physical page per grid step; the page id comes from the
+    scalar-prefetched block table — the paged-pool indirection itself."""
+    return pl.BlockSpec(
+        (1, page_size, 1, dh),
+        lambda b, h, p, bt_ref, kl_ref, qs_ref: (bt_ref[b, p], 0, h, 0))
+
+
+def _lut_spec(arr):
+    nd = arr.ndim
+    return pl.BlockSpec(
+        arr.shape,
+        lambda b, h, p, bt_ref, kl_ref, qs_ref, _nd=nd: (0,) * _nd)
+
+
+def paged_prefill_attention(
+    q: Array,              # (B, H, C, Dh) chunk queries
+    k_pages: Array,        # (num_pages, page_size, KVH, Dh) shared pool
+    v_pages: Array,
+    block_tables: Array,   # (B, max_pages_per_seq) int32 physical page ids
+    q_start: Array,        # (B,) int32 — tokens cached before this chunk
+    kv_lens: Array,        # (B,) int32 — valid keys incl. this chunk
+    tables: RexpTables | Lut2DTables | None = None,
+    *,
+    method: str = "exact",          # 'exact' | 'rexp' | 'lut2d'
+    scale: float | None = None,
+    index_mode: str = "round",
+    lookup: str = "select",
+    interpret: bool | None = None,
+) -> Array:
+    """Fused paged-prefill attention; returns (B, H, C, Dh) f32.
+
+    ``interpret=None`` resolves per backend: compiled (Mosaic) on TPU,
+    interpreter emulation elsewhere — callers never get a silent
+    interpreter run on real hardware, and CPU callers never get a
+    lowering error.
+
+    Numerics match ``ops.lut_attention_prefill_varlen`` on the gathered
+    view: identical integer pipeline (bins, e_int, Σ, σ_int); the final
+    f32 V-contraction accumulates per page, so outputs agree to f32
+    roundoff (the parity suite pins the tolerance).  Rows past a chunk's
+    valid length carry the same defined-but-garbage values as the
+    oracle's (the engine discards them).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, c, dh = q.shape
+    num_pages, page_size, kvh, _ = k_pages.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    mp = block_tables.shape[1]
+    scale = scale if scale is not None else dh ** -0.5
+
+    qg = q.reshape(b, kvh, g, c, dh)
+    block_tables = block_tables.astype(jnp.int32)
+    kv_lens = kv_lens.astype(jnp.int32)
+    q_start = jnp.asarray(q_start, jnp.int32)
+
+    q_spec = pl.BlockSpec(
+        (1, 1, g, c, dh),
+        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0, 0))
+    kv_spec = _pool_spec(page_size, dh)
+    acc_spec = pl.BlockSpec(
+        (1, 1, g, c),
+        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0))
+    o_spec = pl.BlockSpec(
+        (1, 1, g, c, dh),
+        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0, 0))
+    grid = (b, kvh, mp)  # page axis innermost → sequential accumulation
+
+    def spec(in_specs, out_specs):
+        return pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3, grid=grid,
+            in_specs=in_specs, out_specs=out_specs)
+
+    (lut_main, lut_aux, exp_step, qmax, scale_ex,
+     scale_sum) = policy_kernel_tables(method, tables)
+
+    geom = dict(scale=scale, page_size=page_size)
+
+    # Pass 1: global row max, accumulated online over the page chunks.
+    m = pl.pallas_call(
+        functools.partial(_pf_rowmax_kernel, **geom),
+        grid_spec=spec([q_spec, kv_spec], acc_spec),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, c), jnp.float32),
+        interpret=interpret,
+    )(block_tables, kv_lens, q_start, qg, k_pages)
+
+    # Pass 2: global Σ of the policy's numerators.
+    s_sum = pl.pallas_call(
+        functools.partial(_pf_sum_kernel, method=method, exp_step=exp_step,
+                          index_mode=index_mode, lookup=lookup, **geom),
+        grid_spec=spec([q_spec, kv_spec, acc_spec, _lut_spec(lut_main)],
+                       acc_spec),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, c), jnp.float32),
+        interpret=interpret,
+    )(block_tables, kv_lens, q_start, qg, k_pages, m, lut_main)
+
+    # Pass 3: per-element σ · V, accumulated page by page.
+    out = pl.pallas_call(
+        functools.partial(_pf_weight_kernel, method=method, qmax=qmax,
+                          exp_step=exp_step, scale_ex=scale_ex,
+                          scale_sum=scale_sum, index_mode=index_mode,
+                          lookup=lookup, **geom),
+        grid_spec=spec([q_spec, kv_spec, kv_spec, acc_spec, acc_spec,
+                        _lut_spec(lut_main), _lut_spec(lut_aux)],
+                       o_spec),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, c, dh), jnp.float32),
+        interpret=interpret,
+    )(block_tables, kv_lens, q_start, qg, k_pages, v_pages, m, s_sum,
+      lut_main, lut_aux)
+
+    return out.reshape(b, h, c, dh)

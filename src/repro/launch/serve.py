@@ -14,12 +14,13 @@ prefill: prompts enter the page pool in fixed-size chunks (one compile
 for every prompt length) interleaved with decode steps, so a long
 prompt does not stall running slots.
 
-``--paged-backend`` selects the continuous engine's decode-attention
-kernel: ``auto`` (default) runs the fused Pallas paged kernel on TPU
-and the dense block-table reference elsewhere (GPU included, until a
-Mosaic-GPU port lands); ``pallas`` forces the kernel (interpret mode
-off-TPU — slow, for validation); ``dense`` forces the reference
-everywhere.  Output tokens are identical across backends.
+``--paged-backend`` selects the continuous engine's paged-attention
+kernels for BOTH phases (decode steps and prefill chunks): ``auto``
+(default) runs the fused Pallas paged kernels on TPU and the dense
+block-table references elsewhere (GPU included, until a Mosaic-GPU
+port lands); ``pallas`` forces the kernels (interpret mode off-TPU —
+slow, for validation, never a silent stand-in); ``dense`` forces the
+references everywhere.  Output tokens are identical across backends.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b \
       --scale-down 256,8,512 --softmax rexp --precision uint8 \
@@ -62,8 +63,9 @@ def main() -> None:
                     choices=["lockstep", "continuous"])
     ap.add_argument("--paged-backend", default="auto",
                     choices=["auto", "pallas", "dense"],
-                    help="continuous-engine decode attention: fused Pallas "
-                         "paged kernel vs dense block-table reference")
+                    help="continuous-engine paged attention (decode AND "
+                         "prefill chunks): fused Pallas paged kernels vs "
+                         "dense block-table references")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=256)
     ap.add_argument("--prefill-chunk", type=int, default=16,
@@ -130,11 +132,14 @@ def main() -> None:
         results = eng.run()
         dt = time.time() - t0
         toks = eng.stats.tokens
-        from repro.kernels.lut_attention.ops import resolve_paged_backend
+        from repro.kernels.lut_attention.ops import (
+            resolve_paged_backend, resolve_paged_prefill_backend)
         ttfts = [r.ttft_s for r in results.values() if r.ttft_s is not None]
         print(f"policy={policy.impl}/{policy.precision} continuous-batching "
               f"[decode attention: "
-              f"{resolve_paged_backend(args.paged_backend)}]: "
+              f"{resolve_paged_backend(args.paged_backend)}; prefill "
+              f"attention: "
+              f"{resolve_paged_prefill_backend(args.paged_backend)}]: "
               f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. "
               f"compile; {eng.stats.steps} decode steps, "
               f"{eng.stats.prefill_steps} prefill chunks of "

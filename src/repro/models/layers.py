@@ -216,18 +216,20 @@ def _paged_prefill_chunk(p: Params, x: Array, cache: PagedPrefillCache, *,
                          n_heads: int, n_kv_heads: int, head_dim: int,
                          qk_norm: bool, norm_eps: float,
                          rope_theta: float | None, policy: SoftmaxPolicy,
-                         backend: str, q_chunk: int, k_chunk: int):
+                         paged_backend: str, q_chunk: int, k_chunk: int):
     """One prompt chunk against the paged pool — scatter-then-attend.
 
     The chunk's K/V go straight into the pool pages at positions
     ``[lengths, lengths + chunk_lens)`` through the block table (no
     contiguous per-request cache is ever materialized), then the chunk's
     queries attend to every prior key *through the same block tables*
-    via :func:`lut_attention_paged_prefill`.  Padding rows (row index ≥
-    ``chunk_lens``) write to the null page and read garbage that the
-    engine discards; per-chunk max-normalization inside the attention is
-    exactly the whole-prompt path's, so the LUT tables see the ranges
-    they were calibrated for.
+    via :func:`lut_attention_paged_prefill` — governed by the same
+    ``paged_backend`` knob as paged decode (fused Pallas kernel on TPU;
+    dense reference elsewhere), NOT by the lockstep attention backend.
+    Padding rows (row index ≥ ``chunk_lens``) write to the null page and
+    read garbage that the engine discards; per-chunk max-normalization
+    inside the attention is exactly the whole-prompt path's, so the LUT
+    tables see the ranges they were calibrated for.
     """
     b, c, _ = x.shape
     positions = cache.lengths[:, None] + jnp.arange(c, dtype=jnp.int32)
@@ -250,7 +252,8 @@ def _paged_prefill_chunk(p: Params, x: Array, cache: PagedPrefillCache, *,
     out = lut_attention_paged_prefill(
         q, k_pages, v_pages, cache.block_tables,
         q_start=cache.lengths, kv_lens=cache.lengths + cache.chunk_lens,
-        policy=policy, backend=backend, q_chunk=q_chunk, k_chunk=k_chunk)
+        policy=policy, backend=paged_backend, q_chunk=q_chunk,
+        k_chunk=k_chunk)
     new_cache = PagedPrefillCache(
         k_pages=k_pages, v_pages=v_pages, block_tables=cache.block_tables,
         lengths=cache.lengths + cache.chunk_lens,
@@ -337,7 +340,8 @@ def apply_attention(
     kv_x: Array | None = None,       # cross-attention source (enc-dec)
     precomputed_kv: tuple[Array, Array] | None = None,  # cached cross KV
     unroll: bool = False,            # unroll blocked-attention chunk loops
-    paged_backend: str = "auto",     # paged decode: 'auto'|'pallas'|'dense'
+    paged_backend: str = "auto",     # paged attn (decode + prefill chunks):
+                                     # 'auto'|'pallas'|'dense'
 ) -> tuple[Array, AttnCache | None]:
     """Self- or cross-attention with pluggable softmax semantics.
 
@@ -354,8 +358,8 @@ def apply_attention(
         out, new_cache = _paged_prefill_chunk(
             p, x, cache, n_heads=n_heads, n_kv_heads=n_kv_heads,
             head_dim=head_dim, qk_norm=qk_norm, norm_eps=norm_eps,
-            rope_theta=rope_theta, policy=policy, backend=backend,
-            q_chunk=q_chunk, k_chunk=k_chunk)
+            rope_theta=rope_theta, policy=policy,
+            paged_backend=paged_backend, q_chunk=q_chunk, k_chunk=k_chunk)
         return _out_projection(p, x, out, b, l), new_cache
     if isinstance(cache, PagedAttnCache):
         if l != 1:

@@ -339,8 +339,11 @@ def prefill_chunk_paged(params: Params, tokens: Array, pools, block_tables,
     (the chunk's first absolute position); chunk_lens (B,) int32 — valid
     tokens entering this chunk.  Every layer scatters the chunk's K/V
     into its pool pages and attends through the block tables
-    (:func:`repro.models.layers._paged_prefill_chunk`) — there is no
-    contiguous ``(1, max_context)`` cache at any point, and because C
+    (:func:`repro.models.layers._paged_prefill_chunk`, dispatched by
+    ``run.paged_backend`` exactly like decode: on TPU the fused Pallas
+    prefill kernel streams pages straight from the pool, no contiguous
+    KV view anywhere on that path) — there is no contiguous
+    ``(1, max_context)`` cache at any point, and because C
     and the block-table width fix every shape, ONE compiled program
     serves all prompt lengths (the cursors are traced operands).
 

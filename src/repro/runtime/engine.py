@@ -21,13 +21,14 @@ head-of-line-stalls the running slots; time-to-first-token for the
 prompt trades off against decode smoothness via ``prefill_budget``.
 
 The attention softmax is governed by ``run.softmax_policy`` exactly as
-in the lockstep path (exact / REXP / 2D-LUT at any precision).  Decode
-attention ships the block tables straight to the paged-attention
-dispatch (``run.paged_backend``): on TPU the fused Pallas kernel
-streams K/V pages directly from the pool (no contiguous gather), while
-CPU/GPU hosts run the dense block-table reference — identical per-key
-numerics either way.  Chunk-prefill attention reads prior keys through
-the same block tables (``lut_attention_paged_prefill``).
+in the lockstep path (exact / REXP / 2D-LUT at any precision).  BOTH
+phases ship the block tables straight to the paged-attention dispatch
+(``run.paged_backend``): decode through
+``lut_attention_paged_decode`` and chunk prefill through
+``lut_attention_paged_prefill`` — on TPU the fused Pallas kernels
+stream K/V pages directly from the pool (no contiguous gather on
+either phase), while CPU/GPU hosts run the dense block-table
+references — identical per-key numerics either way.
 
 Greedy decoding is bit-faithful to ``generate()``: chunked prefill
 masks exactly the keys the whole-prompt path masks (per-chunk
@@ -69,7 +70,10 @@ class EngineStats:
     prefill_steps: int = 0       # prefill-chunk steps (counted separately)
     prefills: int = 0            # prompts fully prefilled
     decode_tokens: int = 0       # useful tokens produced by decode steps
-    prefill_tokens: int = 0      # first tokens (produced by prefill)
+    # first tokens, sampled from the final prefill chunk's logits — one
+    # per completed prefill, NOT prompt tokens (that's ``prompt_tokens``;
+    # this field was misleadingly named ``prefill_tokens`` before)
+    first_tokens: int = 0
     prompt_tokens: int = 0       # prompt tokens pushed through chunks
     preemptions: int = 0
     # longest wall-clock gap between consecutive decode-step COMPLETIONS
@@ -80,7 +84,8 @@ class EngineStats:
 
     @property
     def tokens(self) -> int:
-        return self.decode_tokens + self.prefill_tokens
+        """Generated (sampled) tokens: decode steps + first tokens."""
+        return self.decode_tokens + self.first_tokens
 
 
 class ServingEngine:
@@ -224,7 +229,7 @@ class ServingEngine:
         # prompt complete: the chunk's last-valid-position logits are the
         # whole-prompt logits — sample the first token right here
         self.stats.prefills += 1
-        self.stats.prefill_tokens += 1
+        self.stats.first_tokens += 1
         tok = self._sample(seq, np.asarray(logits[0, 0]))
         # stamp TTFT only now: np.asarray above blocked on the device, so
         # the first token actually exists (async dispatch would otherwise

@@ -213,6 +213,33 @@ def test_engine_paged_kernel_token_identical_to_lockstep(small_lm, impl):
                                       err_msg=f"request {i} ({impl})")
 
 
+@pytest.mark.parametrize("impl", ["exact", "rexp", "lut2d"])
+def test_engine_prefill_kernel_token_identical_multi_chunk(small_lm, impl):
+    """Acceptance: with ``paged_backend='pallas'`` BOTH fused kernels
+    are forced (prefill chunks AND decode; interpret mode on CPU), and
+    prompts longer than the chunk — chunk-multiple, chunk+1, sub-chunk —
+    still decode token-identically to lockstep ``generate()``.  This is
+    the regression gate for the silent-fallback bug: before the prefill
+    kernel existed, 'pallas' prefill silently ran a blocked-XLA
+    stand-in."""
+    model, params = small_lm
+    run = _run_cfg(impl, paged_backend="pallas")
+    rng = np.random.default_rng(11)
+    chunk = 4
+    reqs = [(rng.integers(0, 128, size=pl).tolist(), 4)
+            for pl in (2 * chunk, 2 * chunk + 1, chunk - 1)]
+    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE,
+                        prefill_chunk=chunk)
+    out = eng.run(reqs)
+    ref_run = _run_cfg(impl)  # lockstep path never touches paged dispatch
+    for i, (prompt, m) in enumerate(reqs):
+        ref = np.asarray(generate(
+            model, params, jnp.asarray(prompt, jnp.int32)[None], ref_run,
+            max_new_tokens=m, max_len=CACHE.max_context))[0]
+        np.testing.assert_array_equal(out[i].tokens, ref,
+                                      err_msg=f"request {i} ({impl})")
+
+
 def test_engine_join_evict_under_page_pressure(small_lm):
     """A pool far smaller than the aggregate working set forces
     preemptions; output must still match lockstep exactly."""
@@ -280,8 +307,13 @@ def test_engine_stats_synced_every_step_and_split_by_kind(small_lm):
     assert eng.stats.steps > 0
     assert eng.stats.prompt_tokens >= sum(len(p) for p, _ in reqs)
     # produced ≥ useful: evictions replay work, never lose it
-    assert eng.stats.decode_tokens + eng.stats.prefill_tokens \
+    assert eng.stats.decode_tokens + eng.stats.first_tokens \
         >= sum(m for _, m in reqs)
+    # first_tokens counts SAMPLED first tokens (one per completed
+    # prefill), never prompt tokens — the old name conflated the two
+    assert eng.stats.first_tokens == eng.stats.prefills
+    assert eng.stats.tokens == eng.stats.decode_tokens \
+        + eng.stats.first_tokens
 
 
 def test_engine_ttft_recorded(small_lm):
