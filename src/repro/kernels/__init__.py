@@ -24,6 +24,12 @@ gather-from-block-table reference elsewhere, GPU included (the
 scalar-prefetch grid spec is Mosaic/TPU-only, so GPU falls back to
 dense until a Mosaic-GPU port lands); ``pallas`` forces the kernel —
 compiled on TPU, interpret mode off-TPU (the CI parity configuration,
-never a silent stand-in); ``dense`` forces the reference.  All paths
-share one integer LUT pipeline and produce the same tokens.
+never a silent stand-in); ``dense`` forces the reference.  A ``mesh``
+whose 'model' axis has tp > 1 overrides the knob with the
+tensor-parallel rows (``lut_attention/sharded_paged.py``): the 'heads'
+regime (KVH % tp == 0) runs each head group locally off a
+KV-head-sharded pool with no attention collectives, and the 'pages'
+regime shards the pool's physical-page axis and reduces only (B, H, 1)
+pmax/psum partials — never gathered KV.  All paths share one integer
+LUT pipeline and produce the same tokens.
 """

@@ -25,6 +25,18 @@ asserts the three stay in sync):
     ``pallas``                 fused Pallas kernel   kernel, interpret mode
     ``dense``                  dense reference       dense reference
 
+    and two ``mesh`` rows (tensor-parallel serving; any knob + a mesh
+    whose 'model' axis has tp > 1 — :func:`paged_mesh_regime` picks the
+    regime, and the knob's single-device paths are bypassed):
+
+    ``mesh``, KVH % tp == 0    'heads' regime: shard_map, KV-head-sharded
+                               pool, local dense compute per head group,
+                               no attention collectives
+    ``mesh``, KVH % tp != 0    'pages' regime: page-axis-sharded pool,
+                               per-slab (m, Σ, σ·V) partials reduced with
+                               pmax + integer-Σ psum — only (B, H, 1)
+                               partials on the wire, never gathered KV
+
 The fused kernels (``paged_decode.py`` / ``paged_prefill.py``) stream
 K/V pages straight from the pool through scalar-prefetched block tables
 — no contiguous gather; their scalar-prefetch grid spec is
@@ -417,6 +429,22 @@ def _resolve_paged(backend: str, *, kind: str, dense: str,
     raise ValueError(f"unknown paged {kind} backend {backend!r}")
 
 
+def paged_mesh_regime(mesh, n_kv_heads: int) -> str | None:
+    """The mesh rows of the dispatch matrix (see the module docstring).
+
+    Returns ``None`` without a tensor-parallel mesh (single-device
+    dispatch applies), ``'heads'`` when the GQA KV-head count divides the
+    'model' axis (pool sharded on KV heads, attention fully local per
+    shard), and ``'pages'`` otherwise (pool sharded on the physical-page
+    axis, ``sharded_paged.py`` reduces only ``(B, H, 1)`` partials).
+    """
+    from repro.runtime.partitioning import mesh_model_tp
+    tp = mesh_model_tp(mesh)
+    if tp <= 1:
+        return None
+    return "heads" if n_kv_heads % tp == 0 else "pages"
+
+
 def resolve_paged_prefill_backend(backend: str = "auto") -> str:
     """Resolve the paged-prefill dispatch knob to an executable path.
 
@@ -452,11 +480,17 @@ def lut_attention_paged_prefill(
     backend: str = "naive",  # 'auto' | 'pallas' | 'dense'|'naive' | 'blocked'
     q_chunk: int = 512,
     k_chunk: int = 1024,
+    mesh=None,
 ) -> Array:
     """Prefill-chunk attention reading prior keys through the block
     tables — the chunk's K/V were already scattered into the pool, so
     the pool *is* the only KV **storage** (no contiguous per-request
     cache is ever written).
+
+    A ``mesh`` whose 'model' axis has tp > 1 selects the tensor-parallel
+    rows of the matrix instead of ``backend`` (``paged_mesh_regime``;
+    the pool must carry the matching sharding — see
+    ``runtime/partitioning.paged_pool_pspec``).
 
     Dispatches per :func:`resolve_paged_prefill_backend` (the module
     docstring's matrix).  On the ``pallas`` path the fused kernel
@@ -472,6 +506,12 @@ def lut_attention_paged_prefill(
     length: all shapes are fixed by (C, block-table width); only the
     cursors are traced.
     """
+    regime = paged_mesh_regime(mesh, k_pages.shape[2])
+    if regime is not None:
+        from repro.kernels.lut_attention import sharded_paged
+        return sharded_paged.paged_attention_sharded(
+            q, k_pages, v_pages, block_tables, kv_lens, policy, mesh=mesh,
+            regime=regime, q_start=q_start, scale=scale)
     resolved = resolve_paged_prefill_backend(backend)
     if resolved.startswith("pallas"):
         return paged_prefill_attention(
@@ -561,6 +601,7 @@ def lut_attention_paged_decode(
     *,
     scale: float | None = None,
     backend: str = "auto",  # 'auto' | 'pallas' | 'dense'
+    mesh=None,
 ) -> Array:
     """Decode attention straight off the paged KV pool.
 
@@ -571,7 +612,18 @@ def lut_attention_paged_decode(
     reuses :func:`lut_attention_decode_varlen`.  Per-key numerics are
     identical across paths (the parity suite pins this), so serving
     output does not depend on where a slot decodes.
+
+    A ``mesh`` whose 'model' axis has tp > 1 selects the tensor-parallel
+    rows of the matrix instead of ``backend`` (``paged_mesh_regime``;
+    the pool must carry the matching sharding — see
+    ``runtime/partitioning.paged_pool_pspec``).
     """
+    regime = paged_mesh_regime(mesh, k_pages.shape[2])
+    if regime is not None:
+        from repro.kernels.lut_attention import sharded_paged
+        return sharded_paged.paged_attention_sharded(
+            q, k_pages, v_pages, block_tables, kv_lens, policy, mesh=mesh,
+            regime=regime, scale=scale)
     resolved = resolve_paged_backend(backend)
     if resolved.startswith("pallas"):
         return paged_decode_attention(

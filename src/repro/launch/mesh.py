@@ -24,3 +24,21 @@ def make_host_mesh(data: int | None = None, model: int = 1):
     n = len(jax.devices())
     data = data if data is not None else max(1, n // model)
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(tp: int):
+    """Tensor-parallel serving mesh: ('data'=1, 'model'=tp) over the
+    first ``tp`` host devices.
+
+    The continuous-batching engine's mesh (``launch/serve.py --tp``):
+    the 'model' axis carries the paged-pool sharding and the shard_map
+    attention dispatch.  Built directly (not via ``jax.make_mesh``) so
+    it can span a *subset* of the host's devices.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if not 1 <= tp <= len(devices):
+        raise ValueError(f"--tp {tp}: host has {len(devices)} device(s)")
+    return Mesh(np.asarray(devices[:tp]).reshape(1, tp), ("data", "model"))

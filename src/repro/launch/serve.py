@@ -76,7 +76,25 @@ def main() -> None:
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prompt tokens prefilled per engine step "
                          "(default: one chunk)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for the continuous "
+                         "engine: shard the page pool (and, with "
+                         "--shard-params, the weights) over a "
+                         "('data'=1, 'model'=tp) mesh of the host's "
+                         "devices; output stays token-identical to "
+                         "--tp 1 (bitwise attention in the 'heads' "
+                         "regime; argmax-level in 'pages', where the "
+                         "final f32 contraction reassociates — see "
+                         "README)")
+    ap.add_argument("--shard-params", action="store_true",
+                    help="with --tp > 1: TP-shard the weights instead "
+                         "of replicating them (production layout; "
+                         "matmul reductions may reassociate at "
+                         "roundoff level)")
     args = ap.parse_args()
+    if args.shard_params and args.tp <= 1:
+        ap.error("--shard-params requires --tp > 1 (there is no mesh to "
+                 "shard the weights over)")
 
     arch = get_arch(args.arch)
     if args.scale_down:
@@ -109,6 +127,10 @@ def main() -> None:
     if args.engine == "continuous" and not engine_ok:
         print("continuous engine serves attention-only decoder LMs; "
               "falling back to lockstep")
+    if args.tp > 1 and not use_engine:
+        # never report single-device lockstep numbers as a --tp run
+        ap.error("--tp > 1 requires the continuous engine (attention-only "
+                 "decoder LM with --engine continuous)")
 
     if use_engine:
         import numpy as np
@@ -117,9 +139,18 @@ def main() -> None:
         mp = -(-max_total // page_size)
         cache = PagedCacheConfig(n_pages=args.n_pages, page_size=page_size,
                                  max_pages_per_seq=mp)
+        mesh = None
+        if args.tp > 1:
+            from repro.launch.mesh import make_serving_mesh
+            from repro.kernels.lut_attention.ops import paged_mesh_regime
+            mesh = make_serving_mesh(args.tp)
+            print(f"tensor-parallel tp={args.tp}: "
+                  f"{paged_mesh_regime(mesh, arch.n_kv_heads)!r} regime "
+                  f"(KVH={arch.n_kv_heads})")
         eng = ServingEngine(model, params, run, n_slots=args.batch,
                             cache=cache, prefill_chunk=args.prefill_chunk,
-                            prefill_budget=args.prefill_budget)
+                            prefill_budget=args.prefill_budget,
+                            mesh=mesh, shard_params=args.shard_params)
         rng = np.random.default_rng(args.seed)
         # mixed lengths: the workload lockstep cannot batch
         for b in range(args.batch):
@@ -133,13 +164,19 @@ def main() -> None:
         dt = time.time() - t0
         toks = eng.stats.tokens
         from repro.kernels.lut_attention.ops import (
-            resolve_paged_backend, resolve_paged_prefill_backend)
+            paged_mesh_regime, resolve_paged_backend,
+            resolve_paged_prefill_backend)
         ttfts = [r.ttft_s for r in results.values() if r.ttft_s is not None]
+        regime = paged_mesh_regime(mesh, arch.n_kv_heads)
+        if regime is not None:  # the mesh rows override the backend knob
+            attn = (f"sharded '{regime}' regime, tp={args.tp}, both phases")
+        else:
+            attn = (f"decode attention: "
+                    f"{resolve_paged_backend(args.paged_backend)}; prefill "
+                    f"attention: "
+                    f"{resolve_paged_prefill_backend(args.paged_backend)}")
         print(f"policy={policy.impl}/{policy.precision} continuous-batching "
-              f"[decode attention: "
-              f"{resolve_paged_backend(args.paged_backend)}; prefill "
-              f"attention: "
-              f"{resolve_paged_prefill_backend(args.paged_backend)}]: "
+              f"[{attn}]: "
               f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. "
               f"compile; {eng.stats.steps} decode steps, "
               f"{eng.stats.prefill_steps} prefill chunks of "

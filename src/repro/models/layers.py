@@ -212,6 +212,22 @@ jax.tree_util.register_dataclass(
     ["k_pages", "v_pages", "block_tables", "lengths", "chunk_lens"], [])
 
 
+def _paged_mesh(n_kv_heads: int):
+    """Active tensor-parallel mesh + paged-dispatch regime.
+
+    The serving engine sets the active mesh around its jitted steps
+    (the same context the lockstep sharded decode reads); both paged
+    phases consult it so the attention — and, in the page-sharded
+    regime, the K/V scatter — run through the shard_map dispatchers.
+    Returns ``(None, None)`` for single-device serving.
+    """
+    from repro.kernels.lut_attention.ops import paged_mesh_regime
+    from repro.runtime import partitioning as PT
+    mesh = PT.active_mesh()
+    regime = paged_mesh_regime(mesh, n_kv_heads)
+    return (mesh, regime) if regime is not None else (None, None)
+
+
 def _paged_prefill_chunk(p: Params, x: Array, cache: PagedPrefillCache, *,
                          n_heads: int, n_kv_heads: int, head_dim: int,
                          qk_norm: bool, norm_eps: float,
@@ -246,14 +262,23 @@ def _paged_prefill_chunk(p: Params, x: Array, cache: PagedPrefillCache, *,
     phys = jnp.where(valid & (positions // ps < mp), phys, 0)
     k_tok = k.transpose(0, 2, 1, 3).astype(cache.k_pages.dtype)  # (B,C,KVH,Dh)
     v_tok = v.transpose(0, 2, 1, 3).astype(cache.v_pages.dtype)
-    k_pages = cache.k_pages.at[phys, offs].set(k_tok)
-    v_pages = cache.v_pages.at[phys, offs].set(v_tok)
+    mesh, regime = _paged_mesh(n_kv_heads)
+    if regime == "pages":
+        # page-axis-sharded pool: the write must stay slab-local
+        from repro.kernels.lut_attention.sharded_paged import (
+            scatter_chunk_sharded)
+        k_pages, v_pages = scatter_chunk_sharded(
+            cache.k_pages, cache.v_pages, phys, offs, k_tok, v_tok,
+            mesh=mesh)
+    else:
+        k_pages = cache.k_pages.at[phys, offs].set(k_tok)
+        v_pages = cache.v_pages.at[phys, offs].set(v_tok)
 
     out = lut_attention_paged_prefill(
         q, k_pages, v_pages, cache.block_tables,
         q_start=cache.lengths, kv_lens=cache.lengths + cache.chunk_lens,
         policy=policy, backend=paged_backend, q_chunk=q_chunk,
-        k_chunk=k_chunk)
+        k_chunk=k_chunk, mesh=mesh)
     new_cache = PagedPrefillCache(
         k_pages=k_pages, v_pages=v_pages, block_tables=cache.block_tables,
         lengths=cache.lengths + cache.chunk_lens,
@@ -285,15 +310,25 @@ def _paged_decode(p: Params, x: Array, cache: PagedAttnCache, *,
                                axis=1)[:, 0]               # (B,)
     k_tok = k[:, :, 0].astype(cache.k_pages.dtype)         # (B, KVH, Dh)
     v_tok = v[:, :, 0].astype(cache.v_pages.dtype)
-    # inactive slots all target the null page; duplicate scatter indices
-    # there are harmless (the page is garbage by definition)
-    k_pages = cache.k_pages.at[phys, offs].set(k_tok)
-    v_pages = cache.v_pages.at[phys, offs].set(v_tok)
+    mesh, regime = _paged_mesh(n_kv_heads)
+    if regime == "pages":
+        # page-axis-sharded pool: the write must stay slab-local
+        from repro.kernels.lut_attention.sharded_paged import (
+            scatter_chunk_sharded)
+        k_pages, v_pages = scatter_chunk_sharded(
+            cache.k_pages, cache.v_pages, phys[:, None], offs[:, None],
+            k_tok[:, None], v_tok[:, None], mesh=mesh)
+    else:
+        # inactive slots all target the null page; duplicate scatter
+        # indices there are harmless (the page is garbage by definition)
+        k_pages = cache.k_pages.at[phys, offs].set(k_tok)
+        v_pages = cache.v_pages.at[phys, offs].set(v_tok)
 
     out = lut_attention_paged_decode(q, k_pages, v_pages,
                                      cache.block_tables,
                                      kv_lens=cache.lengths + 1,
-                                     policy=policy, backend=paged_backend)
+                                     policy=policy, backend=paged_backend,
+                                     mesh=mesh)
     new_cache = PagedAttnCache(k_pages=k_pages, v_pages=v_pages,
                                block_tables=cache.block_tables,
                                lengths=cache.lengths + 1)

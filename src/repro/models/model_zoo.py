@@ -52,13 +52,19 @@ class Model:
             return ED.decode_step(params, token, state, self.cfg, run)
         return TF.decode_step(params, token, state, self.cfg, run)
 
-    def init_paged_pools(self, n_pages: int, page_size: int, run: RunConfig):
-        """Per-layer paged KV pools for continuous-batching decode."""
+    def init_paged_pools(self, n_pages: int, page_size: int, run: RunConfig,
+                         mesh=None):
+        """Per-layer paged KV pools for continuous-batching decode.
+
+        ``mesh`` places them tensor-parallel (heads- or page-sharded
+        per ``partitioning.paged_pool_pspec``).
+        """
         import jax.numpy as jnp
         if self.is_encdec:
             raise NotImplementedError("paged decode: decoder-only LMs")
         dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
-        return TF.init_paged_pools(self.cfg, n_pages, page_size, dtype)
+        return TF.init_paged_pools(self.cfg, n_pages, page_size, dtype,
+                                   mesh=mesh)
 
     def decode_step_paged(self, params, token, pools, block_tables, lengths,
                           run: RunConfig):

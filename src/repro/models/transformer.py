@@ -284,21 +284,38 @@ def check_paged_supported(cfg: ArchConfig) -> None:
             f"paged KV decode requires attention-only mixers, got {bad}")
 
 
-def init_paged_pools(cfg: ArchConfig, n_pages: int, page_size: int, dtype):
+def init_paged_pools(cfg: ArchConfig, n_pages: int, page_size: int, dtype,
+                     mesh=None):
     """Per-layer paged KV pools, periods-stacked like :func:`init_caches`.
 
     Each layer's pool follows the kernel-facing page-major layout
     (:func:`repro.runtime.paged_cache.pool_shape`); page 0 of every pool
     is the reserved null page (see
     :class:`repro.models.layers.PagedAttnCache`).
+
+    With a ``mesh`` the pools are placed tensor-parallel
+    (``partitioning.paged_pool_pspec``): KV heads over 'model' when
+    divisible, else the page axis — padded up to a slab multiple — so
+    the paged attention dispatch runs in its sharded regimes.
     """
+    from repro.runtime import partitioning as PT
     from repro.runtime.paged_cache import pool_shape
     check_paged_supported(cfg)
+    tp = PT.mesh_model_tp(mesh)
     shape = (cfg.n_periods,) + pool_shape(n_pages, page_size,
                                           cfg.n_kv_heads,
-                                          cfg.resolved_head_dim)
-    return tuple({"k_pages": jnp.zeros(shape, dtype),
-                  "v_pages": jnp.zeros(shape, dtype)}
+                                          cfg.resolved_head_dim, tp=tp)
+    if mesh is None:
+        zeros = lambda: jnp.zeros(shape, dtype)  # noqa: E731
+    else:
+        # allocate each shard directly on its owner — the pool is the
+        # largest serving buffer, so a replicated-then-reshard zeros
+        # would OOM device 0 at exactly the size TP makes fit
+        sharding = PT.paged_pool_sharding(mesh, cfg.n_kv_heads,
+                                          stacked=True)
+        zeros = jax.jit(lambda: jnp.zeros(shape, dtype),
+                        out_shardings=sharding)
+    return tuple({"k_pages": zeros(), "v_pages": zeros()}
                  for _ in cfg.period)
 
 

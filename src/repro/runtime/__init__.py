@@ -8,7 +8,8 @@ from repro.runtime.serve_loop import (generate, make_decode_step,
 from repro.runtime.paged_cache import (NULL_PAGE, DecodeView, OutOfPagesError,
                                        PageAllocator, PagedCacheConfig,
                                        PrefillChunkView, decode_view,
-                                       pool_shape, prefill_chunk_view)
+                                       padded_n_pages, pool_shape,
+                                       prefill_chunk_view, view_arrays)
 from repro.runtime.scheduler import Request, Scheduler, SeqState
 from repro.runtime.engine import (EngineStats, GenerationResult,
                                   ServingEngine)

@@ -39,6 +39,7 @@ exactly the keys the contiguous path masks.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Sequence as SeqOf
@@ -51,7 +52,7 @@ from repro.configs.base import RunConfig
 from repro.models.model_zoo import Model
 from repro.models import transformer as TF
 from repro.runtime.paged_cache import (PagedCacheConfig, decode_view,
-                                       prefill_chunk_view)
+                                       prefill_chunk_view, view_arrays)
 from repro.runtime.scheduler import Request, Scheduler, Sequence
 
 
@@ -103,6 +104,20 @@ class ServingEngine:
         one chunk).  Smaller → smoother decode, later first tokens;
         larger → the reverse.  At least one chunk always runs per step.
       jit: wrap the chunk/decode steps in jax.jit.  Both compile once.
+      mesh: run tensor-parallel on this device mesh.  The page pools are
+        sharded over its 'model' axis (KV heads when the arch's GQA
+        count divides it, physical pages otherwise — see
+        ``partitioning.paged_pool_pspec``) and both serving phases
+        attend through the shard_map dispatchers in
+        ``kernels/lut_attention/sharded_paged.py``; page allocation
+        interleaves across device slabs.  Output stays token-identical
+        to the single-device engine.
+      shard_params: with a mesh, place the weights TP-sharded
+        (``partitioning.make_param_shardings(fsdp=False)``) instead of
+        replicated.  Replicated (the default) keeps every computation
+        outside the attention shard_maps bitwise the single-device
+        program; sharded is the production memory/throughput layout and
+        may reassociate matmul reductions at roundoff level.
     """
 
     def __init__(self, model: Model, params, run: RunConfig, *,
@@ -110,7 +125,9 @@ class ServingEngine:
                  cache: PagedCacheConfig = PagedCacheConfig(),
                  prefill_chunk: int = 16,
                  prefill_budget: int | None = None,
-                 jit: bool = True):
+                 jit: bool = True,
+                 mesh=None,
+                 shard_params: bool = False):
         if model.is_encdec:
             raise NotImplementedError("engine serves decoder-only LMs")
         TF.check_paged_supported(model.cfg)
@@ -118,6 +135,19 @@ class ServingEngine:
             raise ValueError(f"prefill_chunk {prefill_chunk} < 1")
         if prefill_budget is not None and prefill_budget < 1:
             raise ValueError(f"prefill_budget {prefill_budget} < 1")
+        if shard_params and mesh is None:
+            raise ValueError("shard_params=True requires a mesh")
+        from repro.runtime import partitioning as PT
+        self.mesh = mesh
+        self.tp = PT.mesh_model_tp(mesh)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            shardings = (PT.make_param_shardings(params, mesh, fsdp=False)
+                         if shard_params else jax.tree_util.tree_map(
+                             lambda _: NamedSharding(mesh, PartitionSpec()),
+                             params))
+            params = jax.tree_util.tree_map(jax.device_put, params,
+                                            shardings)
         self.model = model
         self.params = params
         self.run_cfg = run
@@ -126,9 +156,9 @@ class ServingEngine:
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = (prefill_budget if prefill_budget is not None
                                else prefill_chunk)
-        self.scheduler = Scheduler(cache, n_slots)
+        self.scheduler = Scheduler(cache, n_slots, tp=self.tp)
         self.pools = model.init_paged_pools(cache.n_pages, cache.page_size,
-                                            run)
+                                            run, mesh=mesh)
         self.stats = EngineStats()
         self._results: dict[int, GenerationResult] = {}
         self._t_added: dict[int, float] = {}
@@ -214,14 +244,37 @@ class ServingEngine:
 
     # -- internals --------------------------------------------------------
 
+    @contextlib.contextmanager
+    def _mesh_ctx(self):
+        """Activate the engine's mesh around a device step.
+
+        The paged attention paths in ``models/layers.py`` read the
+        active-mesh context (the established idiom for the lockstep
+        sharded decode), so it must be set when the jitted step
+        *traces*; restoring the previous value keeps a single-device
+        engine in the same process unaffected.
+        """
+        if self.mesh is None:
+            yield
+            return
+        from repro.runtime import partitioning as PT
+        prev = PT.active_mesh()
+        PT.set_active_mesh(self.mesh)
+        try:
+            yield
+        finally:
+            PT.set_active_mesh(prev)
+
     def _prefill_chunk_step(self, seq: Sequence, n: int) -> bool:
         """Push one prompt chunk into the pool; True if the request
         finished outright (single-token budgets / instant EOS)."""
-        view = prefill_chunk_view(seq, n, self.prefill_chunk, self.cache)
-        logits, self.pools = self._chunk_fn(
-            self.params, jnp.asarray(view.tokens), self.pools,
-            jnp.asarray(view.block_tables), jnp.asarray(view.cache_lens),
-            jnp.asarray(view.chunk_lens))
+        view = view_arrays(
+            prefill_chunk_view(seq, n, self.prefill_chunk, self.cache),
+            self.mesh)
+        with self._mesh_ctx():
+            logits, self.pools = self._chunk_fn(
+                self.params, view.tokens, self.pools, view.block_tables,
+                view.cache_lens, view.chunk_lens)
         self.stats.prefill_steps += 1
         self.stats.prompt_tokens += n
         if not self.scheduler.on_prefill_chunk(seq, n):
@@ -242,10 +295,12 @@ class ServingEngine:
 
     def _decode_step(self, running: dict[int, Sequence]) -> list[Sequence]:
         """One batched decode step over the running slots."""
-        view = decode_view(running, self.n_slots, self.cache)
-        logits, self.pools = self._decode_fn(
-            self.params, jnp.asarray(view.tokens), self.pools,
-            jnp.asarray(view.block_tables), jnp.asarray(view.lengths))
+        view = view_arrays(decode_view(running, self.n_slots, self.cache),
+                           self.mesh)
+        with self._mesh_ctx():
+            logits, self.pools = self._decode_fn(
+                self.params, view.tokens, self.pools, view.block_tables,
+                view.lengths)
         logits = np.asarray(logits)  # (n_slots, 1, V)
         # stall metric: completion-to-completion, measured AFTER the sync
         # above — un-synced prefill chunks queue device work that

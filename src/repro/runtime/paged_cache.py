@@ -32,8 +32,21 @@ import numpy as np
 NULL_PAGE = 0
 
 
+def padded_n_pages(n_pages: int, tp: int) -> int:
+    """Physical page count rounded up to a multiple of the TP degree.
+
+    The 'pages' regime of the tensor-parallel paged dispatch shards the
+    pool's page axis into ``tp`` equal slabs, so the device pool may be
+    slightly larger than the allocator's view — the padding pages are
+    simply never allocated.
+    """
+    if tp < 1:
+        raise ValueError(f"tp {tp} < 1")
+    return -(-n_pages // tp) * tp
+
+
 def pool_shape(n_pages: int, page_size: int, n_kv_heads: int,
-               head_dim: int) -> tuple[int, int, int, int]:
+               head_dim: int, tp: int = 1) -> tuple[int, int, int, int]:
     """The kernel-facing page-major pool layout, per layer.
 
     Single source of truth for the device pool shape: the leading axis
@@ -41,8 +54,14 @@ def pool_shape(n_pages: int, page_size: int, n_kv_heads: int,
     page's ``(page_size, KVH, Dh)`` tokens are contiguous — the unit the
     paged-decode kernel DMAs per grid step and the target the chunked
     prefill scatters each prompt token into through the block table.
+
+    ``tp`` > 1 (tensor-parallel serving) rounds the page axis up to a
+    multiple of the mesh's 'model' size so it splits into equal device
+    slabs (:func:`padded_n_pages`); the head-sharded regime divides the
+    KVH axis instead and needs no padding, but the rounding is harmless
+    there, so callers pass the mesh's tp unconditionally.
     """
-    return (n_pages, page_size, n_kv_heads, head_dim)
+    return (padded_n_pages(n_pages, tp), page_size, n_kv_heads, head_dim)
 
 
 class OutOfPagesError(RuntimeError):
@@ -74,28 +93,55 @@ class PageAllocator:
 
     FIFO (rather than LIFO) keeps page reuse order deterministic and
     maximally stale, which makes use-after-free bugs loud in tests.
+
+    ``tp`` > 1 makes the free list one FIFO *per device slab* (the
+    'pages' regime shards the pool's page axis into ``tp`` slabs of
+    ``padded_n_pages / tp``) with a round-robin cursor across them:
+    consecutive allocations land on different devices, so a sequence's
+    keys — and with them the per-shard partial-reduction work — spread
+    evenly over the mesh instead of piling onto slab 0, and because
+    ``free()`` returns a page to its owning slab's FIFO the balance
+    survives eviction/completion churn, not just the initial fill.
+    Physical placement is semantically invisible (block-table
+    permutation invariance), so this is purely a load-balance choice;
+    it stays deterministic, and ``tp=1`` degenerates to the historical
+    single-FIFO behavior exactly.
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, tp: int = 1):
         if n_pages < 2:
             raise ValueError("need at least 2 pages (one is the null page)")
+        if tp < 1:
+            raise ValueError(f"tp {tp} < 1")
         self.n_pages = n_pages
-        self._free: deque[int] = deque(range(1, n_pages))
+        self._slab = padded_n_pages(n_pages, tp) // tp
+        self._free: list[deque[int]] = [deque() for _ in range(tp)]
+        for p in range(1, n_pages):
+            self._free[p // self._slab].append(p)
+        self._cursor = 0
         self._owned: set[int] = set()
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return sum(len(d) for d in self._free)
 
     def alloc(self, n: int = 1) -> list[int]:
         """Take ``n`` pages, all-or-nothing.  Raises OutOfPagesError."""
         if n < 0:
             raise ValueError(f"alloc({n})")
-        if n > len(self._free):
+        if n > self.n_free:
             raise OutOfPagesError(
-                f"need {n} pages, {len(self._free)} free "
+                f"need {n} pages, {self.n_free} free "
                 f"(pool has {self.n_pages - 1} usable)")
-        pages = [self._free.popleft() for _ in range(n)]
+        tp = len(self._free)
+        pages: list[int] = []
+        for _ in range(n):
+            for k in range(tp):  # next non-empty slab from the cursor
+                slab = (self._cursor + k) % tp
+                if self._free[slab]:
+                    pages.append(self._free[slab].popleft())
+                    self._cursor = (slab + 1) % tp
+                    break
         self._owned.update(pages)
         return pages
 
@@ -106,7 +152,7 @@ class PageAllocator:
             if pg not in self._owned:
                 raise ValueError(f"double free / foreign page: {pg}")
             self._owned.discard(pg)
-            self._free.append(pg)
+            self._free[pg // self._slab].append(pg)
 
 
 def block_table_row(pages: list[int], max_pages_per_seq: int) -> np.ndarray:
@@ -172,6 +218,30 @@ def prefill_chunk_view(seq: "object", n: int, chunk: int,
                                      cache.max_pages_per_seq)[None],
         cache_lens=np.asarray([start], np.int32),
         chunk_lens=np.asarray([n], np.int32))
+
+
+def view_arrays(view, mesh=None):
+    """Device copy of a :class:`DecodeView` / :class:`PrefillChunkView`.
+
+    Returns the same dataclass with every field as a device array —
+    call sites keep addressing fields by name, no positional coupling.
+    With a ``mesh`` the arrays are placed with a *replicated*
+    ``NamedSharding`` — every device reads the same block tables and
+    cursors, only the pool they index is sharded — so the jitted step
+    never re-infers (or worse, re-transfers) their placement per call.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if mesh is None:
+        put = jnp.asarray
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        put = lambda x: jax.device_put(np.asarray(x), rep)  # noqa: E731
+    return dataclasses.replace(
+        view, **{f.name: put(getattr(view, f.name))
+                 for f in dataclasses.fields(view)})
 
 
 def decode_view(running: dict[int, "object"], n_slots: int,

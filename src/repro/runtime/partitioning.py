@@ -264,6 +264,47 @@ def tokens_sharding(mesh: Mesh, batch_size: int) -> NamedSharding:
     return NamedSharding(mesh, P(*batch_pspec(mesh, batch_size), None))
 
 
+def mesh_model_tp(mesh: Mesh | None) -> int:
+    """Tensor-parallel degree of a mesh: its 'model' axis size.
+
+    1 without a mesh or without that axis — the single guard shared by
+    every TP consumer (pool specs, the paged dispatch regime, the
+    engine's scheduler interleave, pool-shape padding), so the axis
+    convention cannot drift between them.
+    """
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+def paged_pool_pspec(mesh: Mesh | None, n_kv_heads: int) -> P:
+    """Spec for one layer's page-major KV pool (n_pages, ps, KVH, Dh).
+
+    KV heads take 'model' when divisible (the 'heads' regime of the
+    tensor-parallel paged dispatch — attention is fully local per
+    shard); otherwise the PHYSICAL-PAGE axis absorbs 'model' (the
+    'pages' regime: each device owns a slab of pages and the shard_map
+    dispatcher in ``kernels/lut_attention/sharded_paged.py`` reduces
+    only ``(B, H, 1)`` partials).  Mirrors ``cache_pspec``'s
+    heads-else-length fallback for the contiguous lockstep cache.
+    """
+    tp = mesh_model_tp(mesh)
+    if tp <= 1:
+        return P()
+    if n_kv_heads % tp == 0:
+        return P(None, None, "model", None)
+    return P("model", None, None, None)
+
+
+def paged_pool_sharding(mesh: Mesh, n_kv_heads: int,
+                        stacked: bool = True) -> NamedSharding:
+    """NamedSharding for a (periods-stacked) paged pool leaf."""
+    spec = paged_pool_pspec(mesh, n_kv_heads)
+    if stacked:
+        spec = P(None, *spec)
+    return NamedSharding(mesh, spec)
+
+
 def cache_pspec(mesh: Mesh, batch_size: int, n_kv_heads: int,
                 shard_kv_seq: bool = False) -> P:
     """Spec for (B, KVH, L, Dh) KV-cache arrays.

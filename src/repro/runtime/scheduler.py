@@ -76,12 +76,20 @@ class Sequence:
 
 
 class Scheduler:
-    """Admission queue + slot map + page accounting."""
+    """Admission queue + slot map + page accounting.
 
-    def __init__(self, cache: PagedCacheConfig, n_slots: int):
+    ``tp`` > 1 (tensor-parallel serving) makes page allocation
+    mesh-aware: the free list interleaves round-robin across the mesh's
+    page slabs (see :class:`PageAllocator`), so in the page-sharded
+    regime each device carries a balanced share of every sequence's
+    keys.  Scheduling decisions are otherwise identical — physical page
+    placement never changes output (permutation invariance).
+    """
+
+    def __init__(self, cache: PagedCacheConfig, n_slots: int, tp: int = 1):
         self.cache = cache
         self.n_slots = n_slots
-        self.allocator = PageAllocator(cache.n_pages)
+        self.allocator = PageAllocator(cache.n_pages, tp=tp)
         self.waiting: deque[Sequence] = deque()
         self.running: dict[int, Sequence] = {}
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() → slot 0 first

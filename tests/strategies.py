@@ -1,0 +1,99 @@
+"""Shared test strategies and helpers for the paged-KV suites.
+
+One home for the block-table permutation machinery that was copy-pasted
+across ``test_paged_decode_kernel.py`` / ``test_paged_prefill_kernel.py``
+(and for the hypothesis strategies ``test_property_hypothesis.py``
+builds on): the hypothesis-or-fixed-seed decorator, the null-page-fixed
+pool relabelling, and the canonical softmax-policy set.  The sharded
+dispatch suite (``test_engine_tp.py``) imports the same helpers inside
+its forced-multi-device subprocesses, so every path — dense reference,
+Pallas kernels, shard_map dispatchers — is tested against the *same*
+permutation property.
+"""
+
+import numpy as np
+import pytest
+
+#: the three softmax semantics every serving path must support
+POLICY_IMPLS = ("exact", "rexp", "lut2d")
+
+#: fixed-seed fallback cases for the permutation property (used when the
+#: container ships without the hypothesis dev extra)
+FALLBACK_PERMUTATION_CASES = [
+    (0, "exact", (7, 20)),
+    (1, "rexp", (1, 13, 16)),
+    (2, "lut2d", (20, 4, 9, 1)),
+]
+
+
+def make_policies():
+    """impl-name → SoftmaxPolicy map shared by the parity suites."""
+    from repro.core.policies import SoftmaxPolicy
+    return {
+        "exact": SoftmaxPolicy(),
+        "rexp": SoftmaxPolicy(impl="rexp", precision="uint8"),
+        "lut2d": SoftmaxPolicy(impl="lut2d", precision="uint8"),
+    }
+
+
+def pool_permutation(rng, n_pages: int):
+    """Random relabelling of physical page ids with the null page fixed.
+
+    Returns ``(perm, inv)`` with ``perm[0] == 0``:
+    ``new_pool[perm[p]] = pool[p]`` and block tables relabel as
+    ``perm[bt]`` (``inv`` gathers the new pool from the old).
+    """
+    perm = np.concatenate([[0], 1 + rng.permutation(n_pages - 1)])
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(n_pages)
+    return perm, inv
+
+
+def permute_paged_problem(rng, k_pages, v_pages, block_tables):
+    """Relabel a paged problem's physical pages (null page fixed).
+
+    Physical placement is an implementation detail — every paged
+    attention path must produce the same output on the permuted problem.
+    Returns ``(k_pages', v_pages', block_tables')``.
+    """
+    import jax.numpy as jnp
+    perm, inv = pool_permutation(rng, k_pages.shape[0])
+    return (k_pages[jnp.asarray(inv)], v_pages[jnp.asarray(inv)],
+            jnp.asarray(perm, jnp.int32)[block_tables])
+
+
+def permutation_property(fallback_cases=None, max_examples=12):
+    """Decorator for a ``(seed, impl, kv_lens)`` permutation property.
+
+    With hypothesis installed the property is fuzzed (random seeds ×
+    policies × ragged length lists); without the dev extra it collapses
+    to the fixed-seed ``fallback_cases`` via parametrize — the same
+    property, fewer samples.
+    """
+    cases = (fallback_cases if fallback_cases is not None
+             else FALLBACK_PERMUTATION_CASES)
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        def deco(fn):
+            return pytest.mark.parametrize("seed,impl,kv_lens", cases)(fn)
+        return deco
+
+    def deco(fn):
+        return settings(max_examples=max_examples, deadline=None)(given(
+            seed=st.integers(0, 2**31 - 1),
+            impl=st.sampled_from(sorted(POLICY_IMPLS)),
+            kv_lens=st.lists(st.integers(1, 20), min_size=2, max_size=4),
+        )(fn))
+    return deco
+
+
+def finite_rows(max_cols: int = 48, max_rows: int = 8):
+    """Hypothesis strategy: equal-length lists of finite f32 logit rows
+    (the softmax-property suites' input shape).  Requires hypothesis."""
+    from hypothesis import strategies as st
+    return st.lists(
+        st.lists(st.floats(-30, 30, allow_nan=False, width=32),
+                 min_size=2, max_size=max_cols),
+        min_size=1, max_size=max_rows,
+    ).filter(lambda rows: len({len(r) for r in rows}) == 1)

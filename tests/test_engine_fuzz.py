@@ -1,0 +1,154 @@
+"""Differential fuzz harness for the continuous-batching engine.
+
+Seeded random request *schedules* — arrival step, prompt length
+(including sub-chunk and chunk+1 shapes), output budget, eviction
+pressure from a tiny page pool — are driven step by step through the
+engine and compared token-for-token against the lockstep ``generate()``
+oracle across exact / REXP / 2D-LUT: the engine-level analogue of the
+kernel parity suites.  The schedules are greedy (temperature 0) because
+the lockstep driver uses a different PRNG chaining; sampled decoding has
+its own determinism tests in ``test_engine.py``, and the
+batch-composition-invariance fuzz here covers the sampled stream via
+engine-vs-engine comparison instead.
+"""
+
+import itertools
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, RunConfig
+from repro.core.policies import SoftmaxPolicy
+from repro.models import build_model
+from repro.runtime import PagedCacheConfig, ServingEngine
+from repro.runtime.serve_loop import generate
+
+CHUNK = 4
+VOCAB = 128
+#: roomy pool (no eviction) and a tiny pool whose usable pages cannot
+#: hold two worst-case sequences at once (forced preemption + replay)
+ROOMY = PagedCacheConfig(n_pages=40, page_size=4, max_pages_per_seq=8)
+TINY = PagedCacheConfig(n_pages=8, page_size=4, max_pages_per_seq=8)
+
+
+def _run_cfg(impl):
+    pol = (SoftmaxPolicy(impl=impl, precision="uint8")
+           if impl != "exact" else SoftmaxPolicy())
+    return RunConfig(dtype="float32", attention_backend="naive",
+                     scan_layers=True, softmax_policy=pol)
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    arch = ARCHS["qwen3-32b"].scaled_down(d_model=32, n_heads=4,
+                                          vocab=VOCAB, n_periods=1)
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _schedule(rng, n_reqs, cache, *, temperatures=(0.0,)):
+    """Random request schedule: (arrival_step, add_request kwargs).
+
+    Prompt lengths are drawn from a menu that always includes the
+    chunking edge cases (sub-chunk, exact chunk, chunk+1) — bounded so
+    the lockstep oracle compiles a handful of prefill shapes, not one
+    per request.
+    """
+    menu = [1, CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK, 3 * CHUNK + 1]
+    sched = []
+    for i in range(n_reqs):
+        plen = int(rng.choice(menu))
+        mnew = int(rng.integers(2, 14))
+        mnew = min(mnew, cache.max_context - plen)
+        sched.append((int(rng.integers(0, 10)), dict(
+            prompt=rng.integers(0, VOCAB, size=plen).tolist(),
+            max_new_tokens=mnew,
+            temperature=float(rng.choice(temperatures)),
+            seed=i)))
+    sched.sort(key=lambda t: t[0])
+    return sched
+
+
+def _drive(engine, schedule):
+    """Feed arrivals at their scheduled steps; run until drained."""
+    pending = deque(schedule)
+    out, rids = {}, []
+    for step in itertools.count():
+        while pending and pending[0][0] <= step:
+            rids.append(engine.add_request(**pending.popleft()[1]))
+        for res in engine.step():
+            out[res.request_id] = res
+        if not pending and not engine.scheduler.has_work():
+            return out, rids
+        assert step < 10_000, "engine failed to drain the schedule"
+
+
+@pytest.mark.parametrize("impl", ["exact", "rexp", "lut2d"])
+@pytest.mark.parametrize("seed,cache", [(0, ROOMY), (2, TINY), (5, TINY)])
+def test_fuzz_schedule_matches_lockstep(tiny_lm, impl, seed, cache):
+    """Acceptance: any seeded schedule — staggered arrivals, ragged
+    prompt/output lengths, evictions under a tiny pool — decodes every
+    request token-identically to lockstep ``generate()``."""
+    model, params = tiny_lm
+    run = _run_cfg(impl)
+    rng = np.random.default_rng(seed)
+    sched = _schedule(rng, n_reqs=7, cache=cache)
+    eng = ServingEngine(model, params, run, n_slots=2, cache=cache,
+                        prefill_chunk=CHUNK)
+    out, rids = _drive(eng, sched)
+    assert sorted(out) == sorted(rids)
+    if cache is TINY:
+        assert eng.stats.preemptions > 0, \
+            "tiny pool never exercised eviction — fuzz lost its teeth"
+    assert eng.scheduler.allocator.n_free == cache.usable_pages  # no leaks
+    for rid, (_, kw) in zip(rids, sched):
+        ref = np.asarray(generate(
+            model, params,
+            np.asarray(kw["prompt"], np.int32)[None], run,
+            max_new_tokens=kw["max_new_tokens"],
+            max_len=cache.max_context))[0]
+        np.testing.assert_array_equal(
+            out[rid].tokens, ref,
+            err_msg=f"seed {seed} impl {impl} request {rid}")
+
+
+def test_fuzz_replay_is_deterministic(tiny_lm):
+    """The engine is a pure function of its request schedule: driving
+    the same seeded schedule twice — wall clock, dict order and jit
+    cache state all differ — reproduces every token."""
+    model, params = tiny_lm
+    run = _run_cfg("rexp")
+    sched = _schedule(np.random.default_rng(7), n_reqs=6, cache=TINY,
+                      temperatures=(0.0, 0.8))
+    out_a, _ = _drive(ServingEngine(model, params, run, n_slots=2,
+                                    cache=TINY, prefill_chunk=CHUNK),
+                      list(sched))
+    out_b, _ = _drive(ServingEngine(model, params, run, n_slots=2,
+                                    cache=TINY, prefill_chunk=CHUNK),
+                      list(sched))
+    assert sorted(out_a) == sorted(out_b)
+    for rid in out_a:
+        np.testing.assert_array_equal(out_a[rid].tokens, out_b[rid].tokens)
+
+
+def test_fuzz_batch_composition_invariance(tiny_lm):
+    """A request's tokens do not depend on what else is in flight:
+    every request of a fuzzed schedule — greedy AND sampled — matches a
+    fresh engine running it solo (covers the sampled stream, which the
+    lockstep oracle cannot: its PRNG chaining differs by design)."""
+    model, params = tiny_lm
+    run = _run_cfg("lut2d")
+    sched = _schedule(np.random.default_rng(9), n_reqs=5, cache=TINY,
+                      temperatures=(0.0, 1.0))
+    assert any(kw["temperature"] > 0 for _, kw in sched)
+    eng = ServingEngine(model, params, run, n_slots=2, cache=TINY,
+                        prefill_chunk=CHUNK)
+    out, rids = _drive(eng, list(sched))
+    for rid, (_, kw) in zip(rids, sched):
+        solo = ServingEngine(model, params, run, n_slots=2, cache=ROOMY,
+                             prefill_chunk=CHUNK).run([dict(kw)])
+        np.testing.assert_array_equal(out[rid].tokens, solo[0].tokens,
+                                      err_msg=f"request {rid}")

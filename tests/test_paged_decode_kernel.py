@@ -16,18 +16,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.policies import SoftmaxPolicy
+import strategies
 from repro.kernels.lut_attention.ops import (_tables_for, gather_pages,
                                              lut_attention_decode_varlen,
                                              lut_attention_paged_decode,
                                              resolve_paged_backend)
 from repro.kernels.lut_attention.paged_decode import paged_decode_attention
 
-POLICIES = {
-    "exact": SoftmaxPolicy(),
-    "rexp": SoftmaxPolicy(impl="rexp", precision="uint8"),
-    "lut2d": SoftmaxPolicy(impl="lut2d", precision="uint8"),
-}
+POLICIES = strategies.make_policies()
 
 TOL = dict(rtol=2e-6, atol=2e-6)
 
@@ -143,12 +139,13 @@ def test_kernel_under_jit(rng):
 
 
 # ---------------------------------------------------------------------------
-# Property: block-table permutation invariance (hypothesis when available,
-# fixed seeds otherwise — the container ships without the dev extra)
+# Property: block-table permutation invariance (shared machinery in
+# tests/strategies.py — hypothesis when available, fixed seeds otherwise)
 # ---------------------------------------------------------------------------
 
 
-def _check_permutation_invariance(seed: int, impl: str, kv_lens):
+@strategies.permutation_property()
+def test_block_table_permutation_invariance(seed, impl, kv_lens):
     """Physical page placement is an implementation detail: relabelling
     the pool pages (and the block tables with them) must not change the
     kernel output at all — the paged indirection is exact."""
@@ -160,35 +157,7 @@ def _check_permutation_invariance(seed: int, impl: str, kv_lens):
     base = paged_decode_attention(q, kp, vp, bt, kls, _tables_for(pol),
                                   method=pol.impl,
                                   index_mode=pol.index_mode)
-    # permute the physical pages: new_pool[perm[p]] = pool[p] (page 0
-    # stays the null page), and relabel the block tables to match
-    n_pages = kp.shape[0]
-    perm = np.concatenate([[0], 1 + rng.permutation(n_pages - 1)])
-    inv = np.empty_like(perm)
-    inv[perm] = np.arange(n_pages)
-    kp2 = kp[jnp.asarray(inv)]
-    vp2 = vp[jnp.asarray(inv)]
-    bt2 = jnp.asarray(perm, jnp.int32)[bt]
+    kp2, vp2, bt2 = strategies.permute_paged_problem(rng, kp, vp, bt)
     out = paged_decode_attention(q, kp2, vp2, bt2, kls, _tables_for(pol),
                                  method=pol.impl, index_mode=pol.index_mode)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
-
-
-try:
-    from hypothesis import given, settings, strategies as st
-
-    @settings(max_examples=12, deadline=None)
-    @given(seed=st.integers(0, 2**31 - 1),
-           impl=st.sampled_from(sorted(POLICIES)),
-           kv_lens=st.lists(st.integers(1, 20), min_size=2, max_size=4))
-    def test_block_table_permutation_invariance(seed, impl, kv_lens):
-        _check_permutation_invariance(seed, impl, kv_lens)
-
-except ImportError:  # fixed-seed fallback: same property, fewer samples
-    @pytest.mark.parametrize("seed,impl,kv_lens", [
-        (0, "exact", (7, 20)),
-        (1, "rexp", (1, 13, 16)),
-        (2, "lut2d", (20, 4, 9, 1)),
-    ])
-    def test_block_table_permutation_invariance(seed, impl, kv_lens):
-        _check_permutation_invariance(seed, impl, kv_lens)

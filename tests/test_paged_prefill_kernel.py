@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.policies import SoftmaxPolicy
+import strategies
 from repro.kernels.lut_attention.ops import (_tables_for, gather_pages,
                                              lut_attention,
                                              lut_attention_paged_prefill,
@@ -31,11 +31,7 @@ from repro.kernels.lut_attention.ops import (_tables_for, gather_pages,
                                              resolve_paged_prefill_backend)
 from repro.kernels.lut_attention.paged_prefill import paged_prefill_attention
 
-POLICIES = {
-    "exact": SoftmaxPolicy(),
-    "rexp": SoftmaxPolicy(impl="rexp", precision="uint8"),
-    "lut2d": SoftmaxPolicy(impl="lut2d", precision="uint8"),
-}
+POLICIES = strategies.make_policies()
 
 TOL = dict(rtol=2e-6, atol=2e-6)
 
@@ -286,22 +282,37 @@ def test_dispatch_matrix_docs_match_resolvers():
     assert resolve_paged_backend("dense") == "dense"
     assert resolve_paged_prefill_backend("dense") == "naive"
 
+    # ... and the two mesh rows: heads when the GQA KV-head count
+    # divides the axis, pages otherwise (the full resolver unit test —
+    # no-mesh, tp=1, missing axis — lives in test_engine_tp.py)
+    from repro.compat import make_abstract_mesh
+    from repro.kernels.lut_attention.ops import paged_mesh_regime
+    tp4 = make_abstract_mesh((1, 4), ("data", "model"))
+    assert paged_mesh_regime(tp4, 4) == "heads"
+    assert paged_mesh_regime(tp4, 3) == "pages"
+
     def flat(text):  # whitespace-normalized: phrases survive line wraps
         return " ".join(text.split())
 
-    # ops.py carries the canonical matrix, one row per knob
+    # ops.py carries the canonical matrix, one row per knob — including
+    # the two mesh rows (heads / pages regimes, (B, H, 1) partials)
     ops_doc = flat(ops_mod.__doc__)
     for needle in ("``auto``", "``pallas``", "``dense``",
-                   "interpret mode", "Mosaic/TPU-only"):
+                   "interpret mode", "Mosaic/TPU-only",
+                   "``mesh``, KVH % tp == 0", "``mesh``, KVH % tp != 0",
+                   "'heads' regime", "'pages' regime", "(B, H, 1)"):
         assert needle in ops_doc, f"ops.py docstring lost {needle!r}"
     assert "paged_prefill" in ops_doc and "paged_decode" in ops_doc
 
     # kernels/__init__ restates it for both kernels, no TPU/GPU drift:
-    # GPU is dense-fallback (not "TPU/GPU runs the kernel")
+    # GPU is dense-fallback (not "TPU/GPU runs the kernel"), and the
+    # mesh rows say what actually shards (heads vs pages, no KV gather)
     pkg_doc = flat(K.__doc__)
     assert "paged_prefill.py" in pkg_doc and "paged_decode.py" in pkg_doc
     assert "GPU falls back to dense" in pkg_doc
     assert "interpret mode off-TPU" in pkg_doc
+    assert "'heads' regime" in pkg_doc and "'pages' regime" in pkg_doc
+    assert "never gathered KV" in pkg_doc
 
     # README's serving section shows the same matrix for both kernels
     readme = flat((pathlib.Path(__file__).resolve().parent.parent
@@ -310,15 +321,20 @@ def test_dispatch_matrix_docs_match_resolvers():
         and "| `dense` |" in readme, "README lost the dispatch matrix"
     assert "decode + prefill" in readme
     assert "interpret" in readme
+    assert "| any knob + `mesh` (tp > 1), KVH % tp == 0 |" in readme \
+        and "| any knob + `mesh` (tp > 1), KVH % tp != 0 |" in readme, \
+        "README lost the mesh rows of the dispatch matrix"
+    assert "`heads` regime" in readme and "`pages` regime" in readme
 
 
 # ---------------------------------------------------------------------------
-# Property: block-table permutation invariance (hypothesis when available,
-# fixed seeds otherwise — the container ships without the dev extra)
+# Property: block-table permutation invariance (shared machinery in
+# tests/strategies.py — hypothesis when available, fixed seeds otherwise)
 # ---------------------------------------------------------------------------
 
 
-def _check_permutation_invariance(seed: int, impl: str, kv_lens):
+@strategies.permutation_property()
+def test_block_table_permutation_invariance(seed, impl, kv_lens):
     """Physical page placement is an implementation detail: relabelling
     the pool pages (and the block tables with them) must not change the
     kernel output at all — the paged indirection is exact."""
@@ -332,34 +348,8 @@ def _check_permutation_invariance(seed: int, impl: str, kv_lens):
     base = paged_prefill_attention(q, kp, vp, bt, qs, kls,
                                    _tables_for(pol), method=pol.impl,
                                    index_mode=pol.index_mode)
-    n_pages = kp.shape[0]
-    perm = np.concatenate([[0], 1 + rng.permutation(n_pages - 1)])
-    inv = np.empty_like(perm)
-    inv[perm] = np.arange(n_pages)
-    kp2 = kp[jnp.asarray(inv)]
-    vp2 = vp[jnp.asarray(inv)]
-    bt2 = jnp.asarray(perm, jnp.int32)[bt]
+    kp2, vp2, bt2 = strategies.permute_paged_problem(rng, kp, vp, bt)
     out = paged_prefill_attention(q, kp2, vp2, bt2, qs, kls,
                                   _tables_for(pol), method=pol.impl,
                                   index_mode=pol.index_mode)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
-
-
-try:
-    from hypothesis import given, settings, strategies as st
-
-    @settings(max_examples=12, deadline=None)
-    @given(seed=st.integers(0, 2**31 - 1),
-           impl=st.sampled_from(sorted(POLICIES)),
-           kv_lens=st.lists(st.integers(1, 20), min_size=2, max_size=4))
-    def test_block_table_permutation_invariance(seed, impl, kv_lens):
-        _check_permutation_invariance(seed, impl, kv_lens)
-
-except ImportError:  # fixed-seed fallback: same property, fewer samples
-    @pytest.mark.parametrize("seed,impl,kv_lens", [
-        (0, "exact", (7, 20)),
-        (1, "rexp", (1, 13, 16)),
-        (2, "lut2d", (20, 4, 9, 1)),
-    ])
-    def test_block_table_permutation_invariance(seed, impl, kv_lens):
-        _check_permutation_invariance(seed, impl, kv_lens)

@@ -1,4 +1,9 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Shared strategies (the finite-logit-rows shape, the paged-pool
+permutation machinery the kernel suites also use) live in
+``tests/strategies.py``.
+"""
 
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +12,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="dev dependency (requirements-dev)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+import strategies  # noqa: E402
 from repro.core import (build_lut_recip_exp, build_lut_alpha,
                         build_rexp_tables, build_lut2d_tables,
                         fake_quant_symmetric, softmax_exact, softmax_lut2d,
@@ -15,11 +21,7 @@ from repro.data.synthetic import DataConfig, SyntheticDataset
 
 PRECS = ["int16", "uint8", "uint4", "uint2"]
 
-finite_rows = st.lists(
-    st.lists(st.floats(-30, 30, allow_nan=False, width=32),
-             min_size=2, max_size=48),
-    min_size=1, max_size=8,
-).filter(lambda rows: len({len(r) for r in rows}) == 1)
+finite_rows = strategies.finite_rows()
 
 
 @settings(max_examples=40, deadline=None)
