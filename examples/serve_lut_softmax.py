@@ -80,7 +80,8 @@ print("(paper's claim: 8-bit LUT softmax ≈ exact per step; 2-bit "
 #    batch through the paged KV cache — the production deployment shape.
 #    The REXP-uint8 tables the engine serves from total ~700 bytes
 #    (paper Table 8), vs the exp/div units they replace.
-from repro.runtime import PagedCacheConfig, ServingEngine  # noqa: E402
+from repro.runtime import (EngineConfig, PagedCacheConfig,  # noqa: E402
+                           ServingEngine)
 
 cache = PagedCacheConfig(n_pages=96, page_size=8, max_pages_per_seq=8)
 rng = np.random.default_rng(0)
@@ -94,7 +95,8 @@ outs = {}
 for name in ("exact", "rexp_uint8"):
     run = RunConfig(dtype="float32", attention_backend="naive",
                     scan_layers=True, softmax_policy=policies[name])
-    eng = ServingEngine(model, state.params, run, n_slots=4, cache=cache)
+    eng = ServingEngine(model, state.params, run,
+                        EngineConfig(n_slots=4, cache=cache))
     outs[name] = eng.run(requests)
     toks = eng.stats.tokens
     print(f"  {name:12s} {toks} tokens in {eng.stats.wall_s:.2f}s "

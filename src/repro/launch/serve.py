@@ -39,7 +39,7 @@ from repro.configs import ARCHS, RunConfig, get_arch
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
-from repro.runtime import PagedCacheConfig, ServingEngine
+from repro.runtime import EngineConfig, PagedCacheConfig, ServingEngine
 from repro.runtime.serve_loop import generate
 from repro.runtime.train_loop import init_train_state
 
@@ -76,6 +76,11 @@ def main() -> None:
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prompt tokens prefilled per engine step "
                          "(default: one chunk)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share full-page prompt prefixes across requests "
+                         "(refcounted pages + copy-on-write): matched "
+                         "prefixes skip prefill entirely; tokens stay "
+                         "identical to no-sharing")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree for the continuous "
                          "engine: shard the page pool (and, with "
@@ -131,6 +136,9 @@ def main() -> None:
         # never report single-device lockstep numbers as a --tp run
         ap.error("--tp > 1 requires the continuous engine (attention-only "
                  "decoder LM with --engine continuous)")
+    if args.prefix_cache and not use_engine:
+        ap.error("--prefix-cache requires the continuous engine (the "
+                 "lockstep path has no page pool to share)")
 
     if use_engine:
         import numpy as np
@@ -147,20 +155,46 @@ def main() -> None:
             print(f"tensor-parallel tp={args.tp}: "
                   f"{paged_mesh_regime(mesh, arch.n_kv_heads)!r} regime "
                   f"(KVH={arch.n_kv_heads})")
-        eng = ServingEngine(model, params, run, n_slots=args.batch,
-                            cache=cache, prefill_chunk=args.prefill_chunk,
-                            prefill_budget=args.prefill_budget,
-                            mesh=mesh, shard_params=args.shard_params)
+        eng = ServingEngine(model, params, run, EngineConfig(
+            n_slots=args.batch, cache=cache,
+            prefill_chunk=args.prefill_chunk,
+            prefill_budget=args.prefill_budget,
+            prefix_cache=args.prefix_cache,
+            mesh=mesh, shard_params=args.shard_params))
         rng = np.random.default_rng(args.seed)
-        # mixed lengths: the workload lockstep cannot batch
-        for b in range(args.batch):
-            plen = max(1, int(rng.integers(args.prompt_len // 2,
-                                           args.prompt_len + 1)))
-            eng.add_request(rng.integers(0, arch.vocab_size, size=plen),
-                            args.new_tokens, temperature=args.temperature,
-                            seed=args.seed + b)
+        # mixed lengths: the workload lockstep cannot batch.  With the
+        # prefix cache on, every request shares a common preamble (the
+        # system-prompt pattern the cache exists for) and the batch runs
+        # as TWO waves: the first writes the preamble pages, the second
+        # — arriving after those pages are published — maps them in with
+        # zero prefill work (a single simultaneous wave all admits
+        # before anything is published, so nothing would ever hit).
+        preamble = rng.integers(0, arch.vocab_size,
+                                size=args.prompt_len // 2)
+        handles = []
+
+        def add_wave(n, wave):
+            for b in range(n):
+                plen = max(1, int(rng.integers(args.prompt_len // 2,
+                                               args.prompt_len + 1)))
+                tail = rng.integers(0, arch.vocab_size, size=plen)
+                prompt = (np.concatenate([preamble, tail])
+                          [:cache.max_context - args.new_tokens]
+                          if args.prefix_cache else tail)
+                handles.append(eng.add_request(
+                    prompt, args.new_tokens,
+                    temperature=args.temperature,
+                    seed=args.seed + wave * args.batch + b))
+
         t0 = time.time()
-        results = eng.run()
+        if args.prefix_cache:
+            add_wave(args.batch, wave=0)
+            for h in handles:
+                h.result()
+            add_wave(args.batch, wave=1)
+        else:
+            add_wave(args.batch, wave=0)
+        results = {int(h): h.result() for h in handles}
         dt = time.time() - t0
         toks = eng.stats.tokens
         from repro.kernels.lut_attention.ops import (
@@ -183,6 +217,12 @@ def main() -> None:
               f"{args.prefill_chunk}, {eng.stats.preemptions} preemptions, "
               f"mean TTFT {np.mean(ttfts):.3f}s, max decode stall "
               f"{eng.stats.max_decode_gap_s:.3f}s)")
+        if args.prefix_cache:
+            print(f"prefix cache: {eng.stats.prefix_hit_tokens} prompt "
+                  f"tokens served from shared pages "
+                  f"({eng.stats.prompt_tokens} prefilled), "
+                  f"{eng.stats.pages_shared} pages shared, "
+                  f"{eng.stats.cow_copies} copy-on-write copies")
         print("sample token ids:", results[0].tokens[:16].tolist())
         return
 

@@ -246,6 +246,15 @@ def _paged_prefill_chunk(p: Params, x: Array, cache: PagedPrefillCache, *,
     read garbage that the engine discards; per-chunk max-normalization
     inside the attention is exactly the whole-prompt path's, so the LUT
     tables see the ranges they were calibrated for.
+
+    Prefix-cache contract: with copy-on-write page sharing enabled, the
+    engine guarantees every page this chunk *writes* (positions
+    ``[lengths, lengths + chunk_lens)``) is privately owned by the
+    sequence — shared pages appear only strictly before ``lengths``,
+    and a divergence landing mid-way into a shared page was already
+    re-pointed at a fresh duplicate on the host side before this runs.
+    Reads through the block table are placement-oblivious, so this
+    function needs no sharing awareness at all.
     """
     b, c, _ = x.shape
     positions = cache.lengths[:, None] + jnp.arange(c, dtype=jnp.int32)
@@ -298,6 +307,13 @@ def _paged_decode(p: Params, x: Array, cache: PagedAttnCache, *,
     (fused Pallas kernel on TPU; dense block-table reference elsewhere).
     The numerics per valid key are identical to the contiguous-cache
     decode path either way.
+
+    Prefix-cache contract: the page holding position ``lengths`` is
+    always privately owned by the slot writing it — the scheduler never
+    maps a *shared* page at a sequence's append frontier (decode always
+    appends past the prompt, and copy-on-write already duplicated any
+    shared last page during admission) — so the scatter below is safe
+    without any refcount checks on the device.
     """
     b, l, _ = x.shape
     positions = cache.lengths[:, None]  # (B, 1) absolute positions

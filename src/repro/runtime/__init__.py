@@ -10,7 +10,9 @@ from repro.runtime.paged_cache import (NULL_PAGE, DecodeView, OutOfPagesError,
                                        PrefillChunkView, decode_view,
                                        padded_n_pages, pool_shape,
                                        prefill_chunk_view, view_arrays)
+from repro.runtime.prefix_cache import PrefixCache
 from repro.runtime.scheduler import Request, Scheduler, SeqState
-from repro.runtime.engine import (EngineStats, GenerationResult,
+from repro.runtime.engine import (EngineConfig, EngineStats,
+                                  GenerationResult, RequestHandle,
                                   ServingEngine)
 from repro.runtime.fault_tolerance import ResilientTrainer, TrainerReport

@@ -42,6 +42,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Sequence as SeqOf
 
 import jax
@@ -56,6 +57,99 @@ from repro.runtime.paged_cache import (PagedCacheConfig, decode_view,
 from repro.runtime.scheduler import Request, Scheduler, Sequence
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything that shapes a :class:`ServingEngine`'s programs.
+
+    One object instead of seven loose keyword arguments: construction
+    sites name exactly the knobs they change, defaults live in one
+    place, and a config can be stored / logged / passed through
+    launchers without re-spelling the signature.  (The old
+    ``ServingEngine(..., n_slots=, cache=, ...)`` kwargs still work for
+    one release behind a ``DeprecationWarning``.)
+    """
+
+    n_slots: int = 4                 # decode-batch capacity
+    cache: PagedCacheConfig = PagedCacheConfig()
+    prefill_chunk: int = 16          # prompt tokens per chunk program
+    prefill_budget: int | None = None  # tokens per step (None → chunk)
+    prefix_cache: bool = False       # copy-on-write prompt-prefix sharing
+    jit: bool = True
+    mesh: object = None              # jax.sharding.Mesh | None
+    shard_params: bool = False
+
+
+class RequestHandle:
+    """Ticket for one queued request.
+
+    What :meth:`ServingEngine.add_request` returns: carries the request
+    id plus live accessors — ``done``, ``result()`` (drives the engine
+    until this request finishes), ``ttft_s`` and ``prefix_hit_tokens``.
+    Hashes/compares/sorts as its integer id, so existing code that
+    collected bare ids (dict keys, ``sorted(...)``, ``int(...)``)
+    keeps working unchanged.
+    """
+
+    __slots__ = ("id", "_engine")
+
+    def __init__(self, rid: int, engine: "ServingEngine"):
+        self.id = rid
+        self._engine = engine
+
+    @property
+    def done(self) -> bool:
+        return self.id in self._engine._results
+
+    def result(self) -> "GenerationResult":
+        """Drive the engine until this request finishes; its result."""
+        while not self.done:
+            if not self._engine.scheduler.has_work():
+                raise RuntimeError(
+                    f"request {self.id} cannot finish: engine has no work")
+            self._engine.step()
+        return self._engine._results[self.id]
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Enqueue → first token, wall clock (None until sampled)."""
+        res = self._engine._results.get(self.id)
+        if res is not None:
+            return res.ttft_s
+        return self._engine._ttft.get(self.id)
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        """Prompt tokens this request served from shared pages."""
+        res = self._engine._results.get(self.id)
+        if res is not None:
+            return res.prefix_hit_tokens
+        seq = self._engine._seqs.get(self.id)
+        return seq.prefix_hit_tokens if seq is not None else 0
+
+    def __int__(self) -> int:
+        return self.id
+
+    __index__ = __int__
+
+    def __hash__(self) -> int:
+        return hash(self.id)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, RequestHandle):
+            return self.id == other.id
+        if isinstance(other, int):
+            return self.id == other
+        return NotImplemented
+
+    def __lt__(self, other) -> bool:
+        if isinstance(other, (RequestHandle, int)):
+            return self.id < int(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"RequestHandle(id={self.id}, done={self.done})"
+
+
 @dataclasses.dataclass
 class GenerationResult:
     request_id: int
@@ -63,6 +157,7 @@ class GenerationResult:
     finish_reason: str           # 'length' | 'eos'
     n_evictions: int
     ttft_s: float | None = None  # enqueue → first token (wall clock)
+    prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
 
 
 @dataclasses.dataclass
@@ -77,6 +172,11 @@ class EngineStats:
     first_tokens: int = 0
     prompt_tokens: int = 0       # prompt tokens pushed through chunks
     preemptions: int = 0
+    # prefix-cache counters (all zero with the cache off), named for
+    # what they count, per the first_tokens precedent:
+    prefix_hit_tokens: int = 0   # prompt tokens never re-prefilled
+    pages_shared: int = 0        # trie pages mapped into block tables
+    cow_copies: int = 0          # copy-on-write page duplications
     # longest wall-clock gap between consecutive decode-step COMPLETIONS
     # (the worst inter-token wait a running slot observes; includes
     # whatever prefill work ran in between)
@@ -89,78 +189,113 @@ class EngineStats:
         return self.decode_tokens + self.first_tokens
 
 
+#: legacy ``ServingEngine(**kwargs)`` names accepted (deprecated) in
+#: place of an :class:`EngineConfig` — exactly the old signature.
+_LEGACY_ENGINE_KWARGS = frozenset(
+    f.name for f in dataclasses.fields(EngineConfig)) - {"prefix_cache"}
+
+
 class ServingEngine:
     """Fixed-capacity continuous-batching driver.
 
     Args:
       model/params/run: as for ``serve_loop.generate``; the arch must be
         a decoder-only, attention-mixer LM (the serving targets).
-      n_slots: decode-batch capacity (sequences decoding concurrently).
-      cache: page-pool sizing; ``cache.max_context`` bounds
+      config: an :class:`EngineConfig`.  Its knobs:
+
+      * ``n_slots``: decode-batch capacity (sequences decoding
+        concurrently).
+      * ``cache``: page-pool sizing; ``cache.max_context`` bounds
         ``prompt + max_new_tokens`` of any request.
-      prefill_chunk: prompt tokens per prefill-chunk program.  Shapes
-        are fixed by this, so one compile serves every prompt length.
-      prefill_budget: prompt tokens prefilled per engine step (default:
-        one chunk).  Smaller → smoother decode, later first tokens;
-        larger → the reverse.  At least one chunk always runs per step.
-      jit: wrap the chunk/decode steps in jax.jit.  Both compile once.
-      mesh: run tensor-parallel on this device mesh.  The page pools are
-        sharded over its 'model' axis (KV heads when the arch's GQA
-        count divides it, physical pages otherwise — see
+      * ``prefill_chunk``: prompt tokens per prefill-chunk program.
+        Shapes are fixed by this, so one compile serves every prompt
+        length.
+      * ``prefill_budget``: prompt tokens prefilled per engine step
+        (default: one chunk).  Smaller → smoother decode, later first
+        tokens; larger → the reverse.  At least one chunk always runs
+        per step.
+      * ``prefix_cache``: share full-page prompt prefixes across
+        requests via a refcounted radix trie with copy-on-write (see
+        ``runtime/prefix_cache.py``).  Matched prefixes skip prefill
+        entirely; output stays token-identical to the no-sharing
+        engine.
+      * ``jit``: wrap the chunk/decode steps in jax.jit.  Both compile
+        once.
+      * ``mesh``: run tensor-parallel on this device mesh.  The page
+        pools are sharded over its 'model' axis (KV heads when the
+        arch's GQA count divides it, physical pages otherwise — see
         ``partitioning.paged_pool_pspec``) and both serving phases
         attend through the shard_map dispatchers in
         ``kernels/lut_attention/sharded_paged.py``; page allocation
         interleaves across device slabs.  Output stays token-identical
         to the single-device engine.
-      shard_params: with a mesh, place the weights TP-sharded
+      * ``shard_params``: with a mesh, place the weights TP-sharded
         (``partitioning.make_param_shardings(fsdp=False)``) instead of
         replicated.  Replicated (the default) keeps every computation
         outside the attention shard_maps bitwise the single-device
         program; sharded is the production memory/throughput layout and
         may reassociate matmul reductions at roundoff level.
+
+    The pre-config keyword arguments (``n_slots=``, ``cache=``, ...)
+    are still accepted for one release: they build the equivalent
+    ``EngineConfig`` under a ``DeprecationWarning``.
     """
 
-    def __init__(self, model: Model, params, run: RunConfig, *,
-                 n_slots: int = 4,
-                 cache: PagedCacheConfig = PagedCacheConfig(),
-                 prefill_chunk: int = 16,
-                 prefill_budget: int | None = None,
-                 jit: bool = True,
-                 mesh=None,
-                 shard_params: bool = False):
+    def __init__(self, model: Model, params, run: RunConfig,
+                 config: EngineConfig | None = None, **kwargs):
+        if kwargs:
+            if config is not None:
+                raise TypeError(
+                    "pass EngineConfig(...) or legacy kwargs, not both: "
+                    f"{sorted(kwargs)}")
+            unknown = set(kwargs) - _LEGACY_ENGINE_KWARGS
+            if unknown:
+                raise TypeError(
+                    f"unknown ServingEngine arguments: {sorted(unknown)}")
+            warnings.warn(
+                "ServingEngine(n_slots=, cache=, ...) keyword arguments "
+                "are deprecated; pass config=EngineConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**kwargs)
+        elif config is None:
+            config = EngineConfig()
         if model.is_encdec:
             raise NotImplementedError("engine serves decoder-only LMs")
         TF.check_paged_supported(model.cfg)
-        if prefill_chunk < 1:
-            raise ValueError(f"prefill_chunk {prefill_chunk} < 1")
-        if prefill_budget is not None and prefill_budget < 1:
-            raise ValueError(f"prefill_budget {prefill_budget} < 1")
-        if shard_params and mesh is None:
+        if config.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk {config.prefill_chunk} < 1")
+        if config.prefill_budget is not None and config.prefill_budget < 1:
+            raise ValueError(f"prefill_budget {config.prefill_budget} < 1")
+        if config.shard_params and config.mesh is None:
             raise ValueError("shard_params=True requires a mesh")
         from repro.runtime import partitioning as PT
+        self.config = config
+        mesh = config.mesh
+        cache = config.cache
         self.mesh = mesh
         self.tp = PT.mesh_model_tp(mesh)
         if mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
             shardings = (PT.make_param_shardings(params, mesh, fsdp=False)
-                         if shard_params else jax.tree_util.tree_map(
-                             lambda _: NamedSharding(mesh, PartitionSpec()),
-                             params))
+                         if config.shard_params else jax.tree_util.tree_map(
+                             lambda _: PT.replicated_sharding(mesh), params))
             params = jax.tree_util.tree_map(jax.device_put, params,
                                             shardings)
         self.model = model
         self.params = params
         self.run_cfg = run
         self.cache = cache
-        self.n_slots = n_slots
-        self.prefill_chunk = prefill_chunk
-        self.prefill_budget = (prefill_budget if prefill_budget is not None
-                               else prefill_chunk)
-        self.scheduler = Scheduler(cache, n_slots, tp=self.tp)
+        self.n_slots = config.n_slots
+        self.prefill_chunk = config.prefill_chunk
+        self.prefill_budget = (config.prefill_budget
+                               if config.prefill_budget is not None
+                               else config.prefill_chunk)
+        self.scheduler = Scheduler(cache, config.n_slots, tp=self.tp,
+                                   prefix_cache=config.prefix_cache)
         self.pools = model.init_paged_pools(cache.n_pages, cache.page_size,
                                             run, mesh=mesh)
         self.stats = EngineStats()
         self._results: dict[int, GenerationResult] = {}
+        self._seqs: dict[int, Sequence] = {}
         self._t_added: dict[int, float] = {}
         self._ttft: dict[int, float] = {}
         self._last_decode_end: float | None = None
@@ -176,37 +311,61 @@ class ServingEngine:
             return model.decode_step_paged(params, token, pools,
                                            block_tables, lengths, run)
 
+        def copy_page_fn(pools, src, dst):
+            # duplicate one physical page across every pool leaf (axis 0
+            # is the period stack, axis 1 the page id) — the device half
+            # of a copy-on-write: bitwise, so sharing stays invisible
+            return jax.tree_util.tree_map(
+                lambda v: v.at[:, dst].set(v[:, src]), pools)
+
         # donate the pools: the old buffers are dead the moment the step
         # returns, so XLA may scatter the new K/V in place (a no-op on
         # CPU, where donation is unimplemented, but the serving intent)
+        jit = config.jit
         self._chunk_fn = (jax.jit(chunk_fn, donate_argnums=(2,))
                           if jit else chunk_fn)
         self._decode_fn = (jax.jit(decode_fn, donate_argnums=(2,))
                            if jit else decode_fn)
+        if jit and mesh is not None:
+            # pin the output placement: page ids are replicated scalars,
+            # so without this the copy could silently re-layout the
+            # sharded pool on its first trace
+            pool_sh = jax.tree_util.tree_map(
+                lambda _: PT.paged_pool_sharding(mesh, model.cfg.n_kv_heads,
+                                                 stacked=True), self.pools)
+            self._copy_fn = jax.jit(copy_page_fn, donate_argnums=(0,),
+                                    out_shardings=pool_sh)
+        elif jit:
+            self._copy_fn = jax.jit(copy_page_fn, donate_argnums=(0,))
+        else:
+            self._copy_fn = copy_page_fn
 
     # -- public API -------------------------------------------------------
 
     def add_request(self, prompt, max_new_tokens: int, *,
                     temperature: float = 0.0, seed: int = 0,
-                    eos_id: int | None = None) -> int:
-        """Queue a request; returns its id."""
+                    eos_id: int | None = None) -> RequestHandle:
+        """Queue a request; returns its :class:`RequestHandle` (which
+        hashes/compares as the bare integer id it used to return)."""
         rid = self._next_id
         self._next_id += 1
-        self.scheduler.add(Request(
+        self._seqs[rid] = self.scheduler.add(Request(
             id=rid, prompt=tuple(int(t) for t in np.asarray(prompt)),
             max_new_tokens=max_new_tokens, temperature=temperature,
             seed=seed, eos_id=eos_id))
         self._t_added[rid] = time.time()
-        return rid
+        return RequestHandle(rid, self)
 
     def step(self) -> list[GenerationResult]:
-        """Admit + budgeted prefill chunks + one decode step.
+        """Admit + COW page copies + budgeted prefill chunks + one
+        decode step.
 
         Returns requests finished this step.
         """
         finished: list[Sequence] = []
         while self.scheduler.try_admit() is not None:
             pass
+        self._run_pending_copies()
         for seq, n in self.scheduler.plan_prefill(self.prefill_chunk,
                                                   self.prefill_budget):
             if self._prefill_chunk_step(seq, n):
@@ -219,6 +378,9 @@ class ServingEngine:
         # sync unconditionally: eviction counts must be visible even on
         # steps where every slot drained (used to lag behind one step)
         self.stats.preemptions = self.scheduler.n_preemptions
+        self.stats.prefix_hit_tokens = self.scheduler.prefix_hit_tokens
+        self.stats.pages_shared = self.scheduler.pages_shared
+        self.stats.cow_copies = self.scheduler.cow_copies
         return [self._record(seq) for seq in finished]
 
     def run(self, requests: SeqOf[tuple] | None = None,
@@ -264,6 +426,31 @@ class ServingEngine:
             yield
         finally:
             PT.set_active_mesh(prev)
+
+    def _run_pending_copies(self) -> None:
+        """Execute the scheduler's queued copy-on-write page copies.
+
+        Runs *before* any prefill chunk of this step: admission queued
+        the copy exactly so that the step's scatter targets a privately
+        owned duplicate.  Page ids ship as traced int32 scalars — one
+        compile serves every (src, dst) pair — and copies are rare (one
+        per fully-resident prompt), so a host-side loop over pairs beats
+        a shape-polymorphic batched variant.
+        """
+        if not self.scheduler.pending_copies:
+            return
+        copies, self.scheduler.pending_copies = \
+            self.scheduler.pending_copies, []
+        if self.mesh is None:
+            put = jnp.int32
+        else:
+            from repro.runtime import partitioning as PT
+            rep = PT.replicated_sharding(self.mesh)
+            put = lambda i: jax.device_put(np.int32(i), rep)  # noqa: E731
+        with self._mesh_ctx():
+            for src, dst in copies:
+                self.pools = self._copy_fn(self.pools, put(src), put(dst))
+        self.scheduler.confirm_copies(copies)
 
     def _prefill_chunk_step(self, seq: Sequence, n: int) -> bool:
         """Push one prompt chunk into the pool; True if the request
@@ -337,7 +524,9 @@ class ServingEngine:
             tokens=np.asarray(seq.generated, np.int32),
             finish_reason=seq.finish_reason or "length",
             n_evictions=seq.n_evictions,
-            ttft_s=self._ttft.pop(rid, None))  # drop per-request timing
+            ttft_s=self._ttft.pop(rid, None),  # drop per-request timing
+            prefix_hit_tokens=seq.prefix_hit_tokens)
         self._t_added.pop(rid, None)           # state with the result
+        self._seqs.pop(rid, None)
         self._results[rid] = res
         return res

@@ -89,10 +89,19 @@ class PagedCacheConfig:
 
 
 class PageAllocator:
-    """FIFO free-list allocator over physical page ids [1, n_pages).
+    """Refcounted FIFO free-list allocator over physical page ids
+    [1, n_pages).
 
     FIFO (rather than LIFO) keeps page reuse order deterministic and
     maximally stale, which makes use-after-free bugs loud in tests.
+
+    Every allocated page carries a reference count: :meth:`alloc` hands
+    pages out at refcount 1, :meth:`share` adds a reader (prefix-cache
+    sharing — the same physical page mapped into several block tables
+    and/or held by the prefix trie), and :meth:`free` drops one
+    reference, returning the page to its slab's FIFO only when the last
+    reference dies.  Plain alloc/free pairs therefore behave exactly as
+    before sharing existed.
 
     ``tp`` > 1 makes the free list one FIFO *per device slab* (the
     'pages' regime shards the pool's page axis into ``tp`` slabs of
@@ -119,14 +128,19 @@ class PageAllocator:
         for p in range(1, n_pages):
             self._free[p // self._slab].append(p)
         self._cursor = 0
-        self._owned: set[int] = set()
+        self._ref: dict[int, int] = {}  # page -> live reference count
 
     @property
     def n_free(self) -> int:
         return sum(len(d) for d in self._free)
 
+    def refcount(self, page: int) -> int:
+        """Live references on ``page`` (0 when free / never allocated)."""
+        return self._ref.get(page, 0)
+
     def alloc(self, n: int = 1) -> list[int]:
-        """Take ``n`` pages, all-or-nothing.  Raises OutOfPagesError."""
+        """Take ``n`` pages at refcount 1, all-or-nothing.
+        Raises OutOfPagesError."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > self.n_free:
@@ -142,17 +156,35 @@ class PageAllocator:
                     pages.append(self._free[slab].popleft())
                     self._cursor = (slab + 1) % tp
                     break
-        self._owned.update(pages)
+        for pg in pages:
+            self._ref[pg] = 1
         return pages
 
+    def share(self, pages: list[int]) -> None:
+        """Add one reference to each page (a new reader of its K/V).
+
+        Sharing never copies — the caller is promising it will only
+        *read* the page (writes go through copy-on-write: see
+        ``Scheduler``/``PrefixCache``); every share must be balanced by
+        one :meth:`free`.
+        """
+        for pg in pages:
+            if pg not in self._ref:
+                raise ValueError(f"cannot share unallocated page: {pg}")
+            self._ref[pg] += 1
+
     def free(self, pages: list[int]) -> None:
+        """Drop one reference per page; a page returns to its slab's
+        FIFO only when its last reference dies."""
         for pg in pages:
             if pg == NULL_PAGE:
                 raise ValueError("cannot free the null page")
-            if pg not in self._owned:
+            if pg not in self._ref:
                 raise ValueError(f"double free / foreign page: {pg}")
-            self._owned.discard(pg)
-            self._free[pg // self._slab].append(pg)
+            self._ref[pg] -= 1
+            if self._ref[pg] == 0:
+                del self._ref[pg]
+                self._free[pg // self._slab].append(pg)
 
 
 def block_table_row(pages: list[int], max_pages_per_seq: int) -> np.ndarray:
@@ -236,8 +268,8 @@ def view_arrays(view, mesh=None):
     if mesh is None:
         put = jnp.asarray
     else:
-        from jax.sharding import NamedSharding, PartitionSpec
-        rep = NamedSharding(mesh, PartitionSpec())
+        from repro.runtime.partitioning import replicated_sharding
+        rep = replicated_sharding(mesh)
         put = lambda x: jax.device_put(np.asarray(x), rep)  # noqa: E731
     return dataclasses.replace(
         view, **{f.name: put(getattr(view, f.name))

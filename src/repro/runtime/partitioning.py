@@ -264,6 +264,15 @@ def tokens_sharding(mesh: Mesh, batch_size: int) -> NamedSharding:
     return NamedSharding(mesh, P(*batch_pspec(mesh, batch_size), None))
 
 
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding — every device holds the whole
+    array.  The placement for everything the sharded serving step reads
+    uniformly: block tables, cache cursors, entering tokens, and the
+    scalar page ids of a copy-on-write duplication (the pool they index
+    is what's sharded, per :func:`paged_pool_pspec`)."""
+    return NamedSharding(mesh, P())
+
+
 def mesh_model_tp(mesh: Mesh | None) -> int:
     """Tensor-parallel degree of a mesh: its 'model' axis size.
 

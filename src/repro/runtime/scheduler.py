@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.runtime.paged_cache import (OutOfPagesError, PageAllocator,
                                        PagedCacheConfig)
+from repro.runtime.prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +65,8 @@ class Sequence:
     prefilled: int = 0               # prompt tokens already in the pool
     finish_reason: str | None = None
     n_evictions: int = 0
+    prefix_hit_tokens: int = 0       # prompt tokens served from shared pages
+    published_pages: int = 0         # prompt pages already offered to the trie
 
     @property
     def prompt_len(self) -> int:
@@ -84,18 +87,40 @@ class Scheduler:
     regime each device carries a balanced share of every sequence's
     keys.  Scheduling decisions are otherwise identical — physical page
     placement never changes output (permutation invariance).
+
+    ``prefix_cache`` enables copy-on-write prompt sharing: admission
+    matches the prompt's full-page prefixes against a
+    :class:`PrefixCache` trie and maps hits straight into the block
+    table (no prefill work), chunked prefill publishes each full prompt
+    page back to the trie, and a prompt that is *entirely* resident
+    copy-on-writes the last matched page so its final token — the one
+    whose logits seed decoding — is recomputed into a privately-owned
+    page (``pending_copies`` hands the device copy to the engine).
+    Matching changes which physical pages a block table names and how
+    much prefill runs, never the K/V bits a position holds, so tokens
+    are identical to the no-sharing engine.
     """
 
-    def __init__(self, cache: PagedCacheConfig, n_slots: int, tp: int = 1):
+    def __init__(self, cache: PagedCacheConfig, n_slots: int, tp: int = 1,
+                 prefix_cache: bool = False):
         self.cache = cache
         self.n_slots = n_slots
         self.allocator = PageAllocator(cache.n_pages, tp=tp)
+        self.prefix_cache = (PrefixCache(cache.page_size, self.allocator)
+                             if prefix_cache else None)
+        #: device page copies the engine must run before the next scatter:
+        #: (src, dst) pairs, dst already in a block table, src kept alive by
+        #: the match reference until :meth:`confirm_copies`.
+        self.pending_copies: list[tuple[int, int]] = []
         self.waiting: deque[Sequence] = deque()
         self.running: dict[int, Sequence] = {}
         self._free_slots = list(range(n_slots - 1, -1, -1))  # pop() → slot 0 first
         self._admissions = 0
         self._arrivals = 0
         self.n_preemptions = 0
+        self.prefix_hit_tokens = 0  # prompt tokens never re-prefilled
+        self.pages_shared = 0       # trie pages mapped into block tables
+        self.cow_copies = 0         # copy-on-write page duplications
 
     # -- queue ------------------------------------------------------------
 
@@ -123,8 +148,26 @@ class Scheduler:
 
     # -- admission (join) -------------------------------------------------
 
+    def _alloc(self, n: int) -> list[int]:
+        """Allocate ``n`` fresh pages, reclaiming dead prefix-cache
+        leaves (LRU) first when the free list alone cannot cover it."""
+        if (self.prefix_cache is not None
+                and n > self.allocator.n_free):
+            self.prefix_cache.reclaim(n - self.allocator.n_free)
+        return self.allocator.alloc(n)
+
     def try_admit(self) -> Sequence | None:
         """Admit the head request if a slot and its prefill pages fit.
+
+        With the prefix cache on, the prompt's resident full-page
+        prefixes are mapped in as shared pages and only the remainder is
+        allocated fresh; ``seq.prefilled`` starts past the hit so
+        chunked prefill walks only the divergent tail.  A fully-resident
+        prompt is capped at ``prompt_len - 1`` hit tokens: the final
+        token must be recomputed (its logits seed decoding), and since
+        it would land mid-way into a *shared* page, that page is
+        copy-on-written — a fresh page plus a queued device copy — so
+        the scatter never touches a page another reader maps.
 
         The admitted sequence enters PREFILLING: it owns a slot and its
         prompt pages, but joins the decode batch only once
@@ -133,20 +176,48 @@ class Scheduler:
         if not self.waiting or not self._free_slots:
             return None
         seq = self.waiting[0]
+        ps = self.cache.page_size
+        matched: list[int] = []
+        if self.prefix_cache is not None:
+            matched = self.prefix_cache.match(seq.request.prompt)
+        hit = len(matched) * ps
+        cow = hit >= seq.prompt_len  # whole prompt resident → COW last page
+        if cow:
+            hit = seq.prompt_len - 1
+        need = (self.cache.pages_for(seq.prompt_len) - len(matched)
+                + (1 if cow else 0))
         try:
-            pages = self.allocator.alloc(
-                self.cache.pages_for(seq.prompt_len))
+            fresh = self._alloc(need)
         except OutOfPagesError:
+            if matched:
+                self.allocator.free(matched)  # drop the match references
             return None  # head-of-line blocking until pages free up
+        if cow:
+            # matched[-1] stays shared; its match reference now backs the
+            # pending device copy (freed in confirm_copies / cancel).
+            self.pending_copies.append((matched[-1], fresh[0]))
+            seq.pages = matched[:-1] + fresh
+            self.cow_copies += 1
+            self.pages_shared += len(matched) - 1
+        else:
+            seq.pages = matched + fresh
+            self.pages_shared += len(matched)
+        seq.prefilled = hit
+        seq.prefix_hit_tokens += hit
+        self.prefix_hit_tokens += hit
+        seq.published_pages = len(matched)
         self.waiting.popleft()
-        seq.pages = pages
         seq.slot = self._free_slots.pop()
         seq.state = SeqState.PREFILLING
-        seq.prefilled = 0
         seq.admitted_at = self._admissions
         self._admissions += 1
         self.running[seq.slot] = seq
         return seq
+
+    def confirm_copies(self, copies: list[tuple[int, int]]) -> None:
+        """The engine ran these (src, dst) device copies: release the
+        match reference that kept each src page alive."""
+        self.allocator.free([src for src, _ in copies])
 
     # -- chunked prefill (Sarathi-style interleaving) ----------------------
 
@@ -197,6 +268,14 @@ class Scheduler:
             raise ValueError(
                 f"request {seq.request.id}: prefilled {seq.prefilled} past "
                 f"prompt length {seq.prompt_len}")
+        if self.prefix_cache is not None:
+            # Publish each prompt page the moment its last token is in the
+            # pool: the page is full, its owner never writes it again
+            # (decode appends into fresh pages), so it is safe to share.
+            ps = self.cache.page_size
+            for j in range(seq.published_pages, seq.prefilled // ps):
+                self.prefix_cache.insert(seq.request.prompt, j, seq.pages[j])
+                seq.published_pages = j + 1
         if seq.prefilled == seq.prompt_len:
             seq.state = SeqState.RUNNING
             return True
@@ -213,7 +292,11 @@ class Scheduler:
         older one, so the oldest admission progresses monotonically and
         the engine cannot livelock even when the aggregate working set
         exceeds the pool.  (The per-request bound in :meth:`add`
-        guarantees a sequence running alone can always grow.)
+        guarantees a sequence running alone can always grow: with the
+        prefix cache on, every trie page *not* reclaimable as a dead
+        leaf is pinned by some slotted sequence's own reference, so
+        free + reclaimable still covers the pool minus the slotted
+        working set.)
         """
         grown: list[Sequence] = []
         evicted: list[Sequence] = []
@@ -223,7 +306,7 @@ class Scheduler:
             need = self.cache.pages_for(seq.total_tokens) - len(seq.pages)
             while need > 0 and seq.state is SeqState.RUNNING:
                 try:
-                    seq.pages.extend(self.allocator.alloc(need))
+                    seq.pages.extend(self._alloc(need))
                     grown.append(seq)
                     need = 0
                 except OutOfPagesError:
@@ -245,13 +328,28 @@ class Scheduler:
         victims in reverse eviction order and let a later arrival jump
         an earlier one — admission must stay FIFO in arrival order no
         matter how many victims one pass produces.
+
+        With the prefix cache on, freeing drops one *reference* per
+        page: pages the trie (or another sequence) still holds survive
+        — the victim's prefill work stays warm for its re-admission —
+        and a not-yet-executed copy-on-write whose destination dies
+        here is cancelled before the engine could copy into a page
+        about to be re-allocated.
         """
+        if self.pending_copies:
+            doomed = set(seq.pages)
+            kept, cancelled = [], []
+            for src, dst in self.pending_copies:
+                (cancelled if dst in doomed else kept).append((src, dst))
+            self.pending_copies = kept
+            self.allocator.free([src for src, _ in cancelled])
         self.allocator.free(seq.pages)
         self.running.pop(seq.slot)
         self._free_slots.append(seq.slot)
         seq.pages = []
         seq.generated = []
         seq.prefilled = 0
+        seq.published_pages = 0
         seq.slot = None
         seq.state = SeqState.WAITING
         seq.n_evictions += 1

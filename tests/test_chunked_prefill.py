@@ -19,7 +19,7 @@ from repro.kernels.lut_attention.ops import (lut_attention,
                                              lut_attention_paged_prefill,
                                              lut_attention_prefill_varlen)
 from repro.models import build_model
-from repro.runtime import PagedCacheConfig, ServingEngine
+from repro.runtime import EngineConfig, PagedCacheConfig, ServingEngine
 from repro.runtime.serve_loop import generate
 
 CACHE = PagedCacheConfig(n_pages=40, page_size=8, max_pages_per_seq=8)
@@ -173,8 +173,9 @@ def test_engine_chunked_prefill_token_identical_across_alignments(
     rng = np.random.default_rng(7)
     plens = [CHUNK, 2 * CHUNK, CHUNK + 1, 2 * CHUNK + 1, CHUNK - 3, 1]
     reqs = [(rng.integers(0, 128, size=pl).tolist(), 6) for pl in plens]
-    eng = ServingEngine(model, params, run, n_slots=3, cache=CACHE,
-                        prefill_chunk=CHUNK)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=3, cache=CACHE,
+                                     prefill_chunk=CHUNK))
     out = eng.run(reqs)
     for i, (prompt, m) in enumerate(reqs):
         ref = np.asarray(generate(
@@ -193,8 +194,9 @@ def test_engine_one_prefill_compile_serves_all_lengths(small_lm):
     run = _run_cfg("exact")
     rng = np.random.default_rng(8)
     plens = [1, CHUNK - 3, CHUNK, CHUNK + 1, 2 * CHUNK, 2 * CHUNK + 5]
-    eng = ServingEngine(model, params, run, n_slots=3, cache=CACHE,
-                        prefill_chunk=CHUNK)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=3, cache=CACHE,
+                                     prefill_chunk=CHUNK))
     eng.run([(rng.integers(0, 128, size=pl).tolist(), 2) for pl in plens])
     traces = eng._chunk_fn._cache_size()
     assert traces == 1, f"prefill retraced {traces} times for {plens}"
@@ -211,10 +213,10 @@ def test_engine_prefill_interleaves_with_decode(small_lm):
     rng = np.random.default_rng(9)
     long_prompt = rng.integers(0, 128, size=40).tolist()
     short_prompt = rng.integers(0, 128, size=3).tolist()
-    eng = ServingEngine(model, params, run, n_slots=2,
-                        cache=PagedCacheConfig(n_pages=40, page_size=8,
-                                               max_pages_per_seq=8),
-                        prefill_chunk=4)
+    eng = ServingEngine(model, params, run, EngineConfig(
+        n_slots=2, prefill_chunk=4,
+        cache=PagedCacheConfig(n_pages=40, page_size=8,
+                               max_pages_per_seq=8)))
     short = eng.add_request(short_prompt, 4)
     done_at: dict[int, int] = {}
     n_steps = 0

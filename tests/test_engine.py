@@ -9,8 +9,8 @@ import pytest
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
-from repro.runtime import (PagedCacheConfig, Request, Scheduler, SeqState,
-                           ServingEngine)
+from repro.runtime import (EngineConfig, PagedCacheConfig, Request,
+                           RequestHandle, Scheduler, SeqState, ServingEngine)
 from repro.runtime.serve_loop import generate
 
 CACHE = PagedCacheConfig(n_pages=40, page_size=8, max_pages_per_seq=8)
@@ -179,7 +179,8 @@ def test_engine_token_identical_to_lockstep(small_lm, impl):
     run = _run_cfg(impl)
     rng = np.random.default_rng(0)
     reqs = _mixed_requests(rng)
-    eng = ServingEngine(model, params, run, n_slots=3, cache=CACHE)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=3, cache=CACHE))
     out = eng.run(reqs)
     assert len(out) == len(reqs)
     for i, (prompt, m) in enumerate(reqs):
@@ -202,7 +203,8 @@ def test_engine_paged_kernel_token_identical_to_lockstep(small_lm, impl):
     reqs = [(rng.integers(0, 128, size=9).tolist(), 7),
             (rng.integers(0, 128, size=4).tolist(), 6),
             (rng.integers(0, 128, size=14).tolist(), 4)]
-    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=CACHE))
     out = eng.run(reqs)
     ref_run = _run_cfg(impl)  # lockstep path never touches paged dispatch
     for i, (prompt, m) in enumerate(reqs):
@@ -228,8 +230,9 @@ def test_engine_prefill_kernel_token_identical_multi_chunk(small_lm, impl):
     chunk = 4
     reqs = [(rng.integers(0, 128, size=pl).tolist(), 4)
             for pl in (2 * chunk, 2 * chunk + 1, chunk - 1)]
-    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE,
-                        prefill_chunk=chunk)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=CACHE,
+                                     prefill_chunk=chunk))
     out = eng.run(reqs)
     ref_run = _run_cfg(impl)  # lockstep path never touches paged dispatch
     for i, (prompt, m) in enumerate(reqs):
@@ -249,7 +252,8 @@ def test_engine_join_evict_under_page_pressure(small_lm):
     rng = np.random.default_rng(1)
     reqs = [(rng.integers(0, 128, size=l).tolist(), m)
             for l, m in [(20, 30), (16, 30), (12, 20), (8, 16)]]
-    eng = ServingEngine(model, params, run, n_slots=3, cache=cache)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=3, cache=cache))
     out = eng.run(reqs)
     assert eng.stats.preemptions > 0
     assert eng.scheduler.allocator.n_free == cache.usable_pages  # no leaks
@@ -263,14 +267,16 @@ def test_engine_join_evict_under_page_pressure(small_lm):
 def test_engine_eos_and_single_token_requests(small_lm):
     model, params = small_lm
     run = _run_cfg("exact")
-    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=CACHE))
     rng = np.random.default_rng(2)
     prompt = rng.integers(0, 128, size=6).tolist()
     # discover the greedy continuation, then use its 3rd token as EOS
     probe = eng.run([(prompt, 8)])
     eos = int(probe[0].tokens[2])
     stop_at = int(np.argmax(probe[0].tokens == eos)) + 1  # first occurrence
-    eng2 = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    eng2 = ServingEngine(model, params, run,
+                         EngineConfig(n_slots=2, cache=CACHE))
     r_eos = eng2.add_request(prompt, 8, eos_id=eos)
     r_one = eng2.add_request(prompt, 1)   # finishes at prefill
     out = eng2.run()
@@ -291,8 +297,9 @@ def test_engine_stats_synced_every_step_and_split_by_kind(small_lm):
     rng = np.random.default_rng(5)
     reqs = [(rng.integers(0, 128, size=l).tolist(), m)
             for l, m in [(20, 30), (16, 30), (12, 20)]]
-    eng = ServingEngine(model, params, run, n_slots=3, cache=cache,
-                        prefill_chunk=8)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=3, cache=cache,
+                                     prefill_chunk=8))
     for p, m in reqs:
         eng.add_request(p, m)
     while eng.scheduler.has_work():
@@ -319,8 +326,9 @@ def test_engine_stats_synced_every_step_and_split_by_kind(small_lm):
 def test_engine_ttft_recorded(small_lm):
     model, params = small_lm
     run = _run_cfg("exact")
-    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE,
-                        prefill_chunk=4)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=CACHE,
+                                     prefill_chunk=4))
     rng = np.random.default_rng(6)
     out = eng.run([(rng.integers(0, 128, size=13).tolist(), 3),
                    (rng.integers(0, 128, size=5).tolist(), 2)])
@@ -339,17 +347,17 @@ def test_engine_sampling_seeded_reproducible(small_lm):
     reqs = [dict(prompt=rng.integers(0, 128, size=l).tolist(),
                  max_new_tokens=m, temperature=0.9, seed=s)
             for l, m, s in [(9, 10, 0), (4, 12, 1), (13, 8, 2)]]
-    out_a = ServingEngine(model, params, run, n_slots=2, cache=CACHE,
-                          prefill_chunk=4).run([dict(r) for r in reqs])
-    out_b = ServingEngine(model, params, run, n_slots=2, cache=CACHE,
-                          prefill_chunk=4).run([dict(r) for r in reqs])
+    cfg = EngineConfig(n_slots=2, cache=CACHE, prefill_chunk=4)
+    out_a = ServingEngine(model, params, run, cfg).run(
+        [dict(r) for r in reqs])
+    out_b = ServingEngine(model, params, run, cfg).run(
+        [dict(r) for r in reqs])
     assert len(out_a) == len(reqs)
     for rid in out_a:
         np.testing.assert_array_equal(out_a[rid].tokens, out_b[rid].tokens)
     # sampling actually happened: at least one request deviates from the
     # greedy continuation (0.9 temperature over a 128-way vocab)
-    greedy = ServingEngine(model, params, run, n_slots=2, cache=CACHE,
-                           prefill_chunk=4).run(
+    greedy = ServingEngine(model, params, run, cfg).run(
         [dict(r, temperature=0.0) for r in reqs])
     assert any(not np.array_equal(out_a[r].tokens, greedy[r].tokens)
                for r in out_a)
@@ -364,7 +372,8 @@ def test_engine_sampling_keys_per_request(small_lm):
     run = _run_cfg("exact")
     rng = np.random.default_rng(22)
     prompt = rng.integers(0, 128, size=7).tolist()
-    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=CACHE))
     ra = eng.add_request(prompt, 12, temperature=1.0, seed=0)
     rb = eng.add_request(prompt, 12, temperature=1.0, seed=1)
     out = eng.run()
@@ -373,7 +382,8 @@ def test_engine_sampling_keys_per_request(small_lm):
     # same request alone vs sharing the batch with another request:
     # identical tokens (slot assignment and batch composition are
     # invisible to the sample stream)
-    solo = ServingEngine(model, params, run, n_slots=2, cache=CACHE).run(
+    solo = ServingEngine(model, params, run,
+                         EngineConfig(n_slots=2, cache=CACHE)).run(
         [dict(prompt=prompt, max_new_tokens=12, temperature=1.0, seed=0)])
     np.testing.assert_array_equal(out[ra].tokens, solo[0].tokens)
 
@@ -385,7 +395,8 @@ def test_engine_sample_key_is_seed_and_position_only(small_lm):
     changing the seed or advancing the position reshuffles it."""
     model, params = small_lm
     run = _run_cfg("exact")
-    eng = ServingEngine(model, params, run, n_slots=1, cache=CACHE)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=1, cache=CACHE))
     # flat logits → uniform categorical: per-pair collision odds are
     # 1/128, so the stream comparisons below cannot flake
     logits = np.zeros((128,), np.float32)
@@ -405,12 +416,84 @@ def test_engine_sample_key_is_seed_and_position_only(small_lm):
     assert len(set(stream(0))) > 1, "position must advance the stream"
 
 
+def test_engine_config_is_the_new_surface(small_lm):
+    """EngineConfig(...) and the old loose kwargs build identical
+    engines; the config travels on the instance."""
+    model, params = small_lm
+    run = _run_cfg("exact")
+    cfg = EngineConfig(n_slots=3, cache=CACHE, prefill_chunk=4,
+                       prefill_budget=8)
+    eng = ServingEngine(model, params, run, cfg)
+    assert eng.config is cfg
+    assert eng.n_slots == 3 and eng.cache is CACHE
+    assert eng.prefill_chunk == 4 and eng.prefill_budget == 8
+    # defaults: a bare engine gets a default config
+    assert ServingEngine(model, params, run).config == EngineConfig()
+    rng = np.random.default_rng(30)
+    reqs = _mixed_requests(rng, n=3)
+    out = eng.run(reqs)
+    with pytest.warns(DeprecationWarning):
+        legacy = ServingEngine(model, params, run, n_slots=3, cache=CACHE,
+                               prefill_chunk=4, prefill_budget=8)
+    assert legacy.config == cfg
+    out_legacy = legacy.run(reqs)
+    for rid in out:
+        np.testing.assert_array_equal(out[rid].tokens,
+                                      out_legacy[rid].tokens)
+
+
+def test_engine_legacy_kwargs_warn_and_reject_mixing(small_lm):
+    """The deprecation shim: every pre-config kwarg warns; mixing a
+    config with kwargs — or passing an unknown kwarg — is a TypeError
+    (silently preferring one over the other would hide bugs)."""
+    model, params = small_lm
+    run = _run_cfg("exact")
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(model, params, run, EngineConfig(), n_slots=2)
+    with pytest.raises(TypeError, match="unknown"):
+        ServingEngine(model, params, run, num_slots=2)  # typo'd name
+
+
+def test_engine_request_handles(small_lm):
+    """add_request returns a RequestHandle that drives itself to
+    completion, exposes TTFT / prefix stats, and stays drop-in
+    compatible with code that stored bare integer ids."""
+    model, params = small_lm
+    run = _run_cfg("exact")
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=CACHE))
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, 128, size=9).tolist()
+    h = eng.add_request(prompt, 5)
+    assert isinstance(h, RequestHandle)
+    assert not h.done and h.ttft_s is None
+    res = h.result()                     # drives eng.step() until done
+    assert h.done and len(res.tokens) == 5
+    assert h.ttft_s is not None and h.ttft_s >= 0.0
+    assert h.result() is res             # idempotent once finished
+    # int compatibility: dict keys, sorting, equality, int()
+    assert int(h) == 0 and h == 0 and hash(h) == hash(0)
+    assert {0: "x"}[h] == "x" and {h: "y"}[0] == "y"
+    h2 = eng.add_request(prompt, 2)
+    assert sorted([h2, h]) == [h, h2] and h < h2 and h < int(h2)
+    out = eng.run()
+    assert out[h2].request_id == 1
+    # a handle on an engine with no queued work cannot complete
+    h3 = ServingEngine(model, params, run).add_request(prompt, 2)
+    h3._engine.scheduler.waiting.clear()
+    with pytest.raises(RuntimeError, match="no work"):
+        h3.result()
+
+
 def test_engine_no_rejit_across_steps(small_lm):
     """The decode step compiles once: mixed lengths, joins and exits all
     reuse the same fixed-shape program."""
     model, params = small_lm
     run = _run_cfg("exact")
-    eng = ServingEngine(model, params, run, n_slots=2, cache=CACHE)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=CACHE))
     rng = np.random.default_rng(3)
     eng.run(_mixed_requests(rng, n=4))
     traces = eng._decode_fn._cache_size()

@@ -22,7 +22,7 @@ import pytest
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
-from repro.runtime import PagedCacheConfig, ServingEngine
+from repro.runtime import EngineConfig, PagedCacheConfig, ServingEngine
 from repro.runtime.serve_loop import generate
 
 CHUNK = 4
@@ -96,8 +96,9 @@ def test_fuzz_schedule_matches_lockstep(tiny_lm, impl, seed, cache):
     run = _run_cfg(impl)
     rng = np.random.default_rng(seed)
     sched = _schedule(rng, n_reqs=7, cache=cache)
-    eng = ServingEngine(model, params, run, n_slots=2, cache=cache,
-                        prefill_chunk=CHUNK)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=cache,
+                                     prefill_chunk=CHUNK))
     out, rids = _drive(eng, sched)
     assert sorted(out) == sorted(rids)
     if cache is TINY:
@@ -115,6 +116,100 @@ def test_fuzz_schedule_matches_lockstep(tiny_lm, impl, seed, cache):
             err_msg=f"seed {seed} impl {impl} request {rid}")
 
 
+def _shared_prefix_schedule(rng, n_reqs, cache, *, temperatures=(0.0,)):
+    """Random schedule whose prompts share full-page preambles.
+
+    Preambles are drawn from a 2-entry pool so the trie sees repeats;
+    tails include length 0 — an exact-duplicate prompt, the case that
+    forces a copy-on-write — and sub-page lengths that must never match.
+    Arrivals are spread out so later requests find a warm trie (a
+    single simultaneous wave all admits before anything is published).
+    """
+    ps = cache.page_size
+    preambles = [rng.integers(0, VOCAB, size=2 * ps).tolist(),
+                 rng.integers(0, VOCAB, size=ps).tolist()]
+    tail_menu = [0, 1, ps - 1, ps, ps + 1]
+    sched = []
+    for i in range(n_reqs):
+        pre = preambles[int(rng.integers(0, len(preambles)))]
+        tail = rng.integers(0, VOCAB,
+                            size=int(rng.choice(tail_menu))).tolist()
+        prompt = (pre + tail)[:cache.max_context - 2]
+        # output budgets lean long: decode growth past the shared pages
+        # is what puts eviction pressure ON a trie-backed pool
+        mnew = int(rng.integers(4, 16))
+        mnew = min(mnew, cache.max_context - len(prompt))
+        sched.append((int(rng.integers(0, 2 * n_reqs)), dict(
+            prompt=prompt, max_new_tokens=mnew,
+            temperature=float(rng.choice(temperatures)), seed=i)))
+    sched.sort(key=lambda t: t[0])
+    return sched
+
+
+@pytest.mark.parametrize("impl", ["exact", "rexp", "lut2d"])
+@pytest.mark.parametrize("seed,cache", [(1, ROOMY), (3, TINY), (6, TINY)])
+def test_fuzz_shared_prefix_matches_lockstep(tiny_lm, impl, seed, cache):
+    """Acceptance: schedules built around shared preambles — staggered
+    arrivals over a warm trie, exact-duplicate prompts forcing COW,
+    eviction pressure landing on shared pages under the tiny pool —
+    decode every request token-identically to lockstep ``generate()``,
+    and the sharing actually happens (prefix_hit_tokens > 0)."""
+    model, params = tiny_lm
+    run = _run_cfg(impl)
+    rng = np.random.default_rng(seed)
+    sched = _shared_prefix_schedule(rng, n_reqs=7, cache=cache)
+    eng = ServingEngine(model, params, run, EngineConfig(
+        n_slots=2, cache=cache, prefill_chunk=CHUNK, prefix_cache=True))
+    out, rids = _drive(eng, sched)
+    assert sorted(out) == sorted(rids)
+    assert eng.stats.prefix_hit_tokens > 0, \
+        "schedule never hit the prefix cache — fuzz lost its teeth"
+    if cache is TINY:
+        assert eng.stats.preemptions > 0, \
+            "tiny pool never exercised eviction — fuzz lost its teeth"
+    # no leaks: every page is free or held by the trie, and reclaiming
+    # the (now-dead) trie returns the pool to empty
+    sched_pages = len(eng.scheduler.prefix_cache.pages())
+    assert eng.scheduler.allocator.n_free + sched_pages \
+        == cache.usable_pages
+    eng.scheduler.prefix_cache.reclaim(cache.usable_pages)
+    assert eng.scheduler.allocator.n_free == cache.usable_pages
+    for rid, (_, kw) in zip(rids, sched):
+        ref = np.asarray(generate(
+            model, params,
+            np.asarray(kw["prompt"], np.int32)[None], run,
+            max_new_tokens=kw["max_new_tokens"],
+            max_len=cache.max_context))[0]
+        np.testing.assert_array_equal(
+            out[rid].tokens, ref,
+            err_msg=f"seed {seed} impl {impl} request {rid}")
+
+
+def test_fuzz_shared_prefix_engine_vs_no_sharing(tiny_lm):
+    """Greedy AND sampled shared-preamble schedules match the
+    no-sharing engine request-for-request (the sampled stream the
+    lockstep oracle cannot check: its PRNG chaining differs by
+    design)."""
+    model, params = tiny_lm
+    run = _run_cfg("lut2d")
+    sched = _shared_prefix_schedule(np.random.default_rng(13), n_reqs=6,
+                                    cache=TINY, temperatures=(0.0, 0.9))
+    assert any(kw["temperature"] > 0 for _, kw in sched)
+    eng_on = ServingEngine(model, params, run, EngineConfig(
+        n_slots=2, cache=TINY, prefill_chunk=CHUNK, prefix_cache=True))
+    out_on, rids = _drive(eng_on, list(sched))
+    eng_off = ServingEngine(model, params, run, EngineConfig(
+        n_slots=2, cache=TINY, prefill_chunk=CHUNK))
+    out_off, _ = _drive(eng_off, list(sched))
+    assert eng_on.stats.pages_shared > 0
+    assert eng_off.stats.pages_shared == 0
+    assert sorted(out_on) == sorted(out_off)
+    for rid in out_on:
+        np.testing.assert_array_equal(out_on[rid].tokens,
+                                      out_off[rid].tokens,
+                                      err_msg=f"request {rid}")
+
+
 def test_fuzz_replay_is_deterministic(tiny_lm):
     """The engine is a pure function of its request schedule: driving
     the same seeded schedule twice — wall clock, dict order and jit
@@ -123,11 +218,10 @@ def test_fuzz_replay_is_deterministic(tiny_lm):
     run = _run_cfg("rexp")
     sched = _schedule(np.random.default_rng(7), n_reqs=6, cache=TINY,
                       temperatures=(0.0, 0.8))
-    out_a, _ = _drive(ServingEngine(model, params, run, n_slots=2,
-                                    cache=TINY, prefill_chunk=CHUNK),
+    cfg = EngineConfig(n_slots=2, cache=TINY, prefill_chunk=CHUNK)
+    out_a, _ = _drive(ServingEngine(model, params, run, cfg),
                       list(sched))
-    out_b, _ = _drive(ServingEngine(model, params, run, n_slots=2,
-                                    cache=TINY, prefill_chunk=CHUNK),
+    out_b, _ = _drive(ServingEngine(model, params, run, cfg),
                       list(sched))
     assert sorted(out_a) == sorted(out_b)
     for rid in out_a:
@@ -144,11 +238,14 @@ def test_fuzz_batch_composition_invariance(tiny_lm):
     sched = _schedule(np.random.default_rng(9), n_reqs=5, cache=TINY,
                       temperatures=(0.0, 1.0))
     assert any(kw["temperature"] > 0 for _, kw in sched)
-    eng = ServingEngine(model, params, run, n_slots=2, cache=TINY,
-                        prefill_chunk=CHUNK)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=TINY,
+                                     prefill_chunk=CHUNK))
     out, rids = _drive(eng, list(sched))
     for rid, (_, kw) in zip(rids, sched):
-        solo = ServingEngine(model, params, run, n_slots=2, cache=ROOMY,
-                             prefill_chunk=CHUNK).run([dict(kw)])
+        solo = ServingEngine(
+            model, params, run,
+            EngineConfig(n_slots=2, cache=ROOMY,
+                         prefill_chunk=CHUNK)).run([dict(kw)])
         np.testing.assert_array_equal(out[rid].tokens, solo[0].tokens,
                                       err_msg=f"request {rid}")

@@ -31,11 +31,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _PRELUDE = r"""
 import sys
 sys.path.insert(0, {tests_dir!r})
+import dataclasses
 import numpy as np, jax, jax.numpy as jnp
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
-from repro.runtime import PagedCacheConfig, ServingEngine
+from repro.runtime import EngineConfig, PagedCacheConfig, ServingEngine
 from repro.launch.mesh import make_serving_mesh
 
 mesh = make_serving_mesh(4)
@@ -149,10 +150,10 @@ reqs = [(rng.integers(0, 128, size=int(l)).tolist(), int(m))
         for l, m in [(9, 7), (21, 6), (4, 8), (14, 5)]]
 for impl in ['exact', 'rexp', 'lut2d']:
     run = run_cfg(impl)
-    ref = ServingEngine(model, params, run, n_slots=3, cache=CACHE,
-                        prefill_chunk=5).run(list(reqs))
-    tpe = ServingEngine(model, params, run, n_slots=3, cache=CACHE,
-                        prefill_chunk=5, mesh=mesh)
+    cfg = EngineConfig(n_slots=3, cache=CACHE, prefill_chunk=5)
+    ref = ServingEngine(model, params, run, cfg).run(list(reqs))
+    tpe = ServingEngine(model, params, run,
+                        dataclasses.replace(cfg, mesh=mesh))
     out = tpe.run(list(reqs))
     assert tpe.tp == 4
     for i in range(len(reqs)):
@@ -212,8 +213,10 @@ def drive(eng):
             out[res.request_id] = res
     return out
 
-ref = drive(ServingEngine(model, params, run, n_slots=3, cache=tiny))
-tpe = ServingEngine(model, params, run, n_slots=3, cache=tiny, mesh=mesh)
+ref = drive(ServingEngine(model, params, run,
+                          EngineConfig(n_slots=3, cache=tiny)))
+tpe = ServingEngine(model, params, run,
+                    EngineConfig(n_slots=3, cache=tiny, mesh=mesh))
 out = drive(tpe)
 assert tpe.stats.preemptions > 0, 'pool never pressured'
 assert tpe.scheduler.allocator.n_free == tiny.usable_pages
@@ -223,6 +226,62 @@ for i in range(len(reqs)):
 print('TP-EVICT-OK')
 """)
     assert "TP-EVICT-OK" in out
+
+
+_PREFIX_SHARING = r"""
+kvh = {kvh}
+arch, model, params = small_model(kvh)
+run = run_cfg('lut2d')
+ps = CACHE.page_size
+rng = np.random.default_rng(11)
+pre = rng.integers(0, 128, size=2 * ps).tolist()
+# tail 0 → an exact duplicate of the preamble-only prompt: the
+# copy-on-write case (and on the pages regime the COW copy's src/dst
+# pages generally live on different device slabs)
+reqs = [(pre + rng.integers(0, 128, size=t).tolist(), int(m))
+        for t, m in [(5, 6), (0, 7), (ps, 5), (0, 6), (3, 8)]]
+
+def drive(eng):
+    out = {{}}
+    for p, m in reqs:
+        eng.add_request(p, m)          # staggered: warm trie for later reqs
+        for res in eng.step():
+            out[res.request_id] = res
+    while eng.scheduler.has_work():
+        for res in eng.step():
+            out[res.request_id] = res
+    return out
+
+ref = drive(ServingEngine(model, params, run,
+                          EngineConfig(n_slots=3, cache=CACHE)))
+tpe = ServingEngine(model, params, run,
+                    EngineConfig(n_slots=3, cache=CACHE, mesh=mesh,
+                                 prefix_cache=True))
+out = drive(tpe)
+assert tpe.tp == 4
+assert tpe.stats.pages_shared > 0, 'schedule never shared a page'
+assert tpe.stats.cow_copies > 0, 'duplicate prompts never forced a COW'
+assert tpe.stats.prefix_hit_tokens > 0
+for i in range(len(reqs)):
+    np.testing.assert_array_equal(out[i].tokens, ref[i].tokens,
+                                  err_msg=f'request {{i}} (kvh={kvh})')
+print('TP-PREFIX-OK')
+"""
+
+
+def test_tp_engine_prefix_cache_token_identical_pages_regime():
+    """Acceptance: prefix sharing + COW on a 4-way page-sharded pool
+    (KVH=1) — shared block-table rows point across device slabs and the
+    COW device copy moves a page between slabs, yet every request stays
+    token-identical to the single-device no-sharing engine."""
+    assert "TP-PREFIX-OK" in run_py(_PREFIX_SHARING.format(kvh=1))
+
+
+def test_tp_engine_prefix_cache_token_identical_heads_regime():
+    """Acceptance: prefix sharing + COW with the pool sharded on KV
+    heads (KVH = tp = 4) — the copy touches every head shard of the
+    page — token-identical to the single-device no-sharing engine."""
+    assert "TP-PREFIX-OK" in run_py(_PREFIX_SHARING.format(kvh=4))
 
 
 # ---------------------------------------------------------------------------
@@ -243,8 +302,8 @@ from repro.launch.hlo_analysis import parse_collectives
 run = run_cfg('rexp')
 for kvh, regime in [(1, 'pages'), (4, 'heads')]:
     arch, model, params = small_model(kvh)
-    eng = ServingEngine(model, params, run, n_slots=3, cache=CACHE,
-                        mesh=mesh)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=3, cache=CACHE, mesh=mesh))
     view = view_arrays(decode_view({}, eng.n_slots, CACHE), mesh)
     with eng._mesh_ctx():
         compiled = eng._decode_fn.lower(eng.params, view.tokens, eng.pools,
