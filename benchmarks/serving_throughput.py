@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import merge_bench_json, time_rotated
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.kernels.lut_attention.ops import (resolve_paged_backend,
@@ -166,23 +167,18 @@ def bench(n_requests: int = 24, n_slots: int = 4, seed: int = 0,
                             _run_cfg(impl, paged_backend="auto"),
                             cache, n_slots, warm)
 
-    def _time_lockstep():
+    def _time_lockstep(_r):
         t0 = time.time()
         out = lockstep(requests, n_slots)
         return time.time() - t0, out
 
-    drivers = {"lock": _time_lockstep,
-               "dense": lambda: _time_requests(eng_dense, requests),
-               "auto": lambda: _time_requests(eng_auto, requests)}
-    best: dict[str, float] = {k: float("inf") for k in drivers}
-    outs: dict[str, dict] = {}
-    order = list(drivers)
-    for r in range(3):
-        for name in order[r:] + order[:r]:
-            dt, outs[name] = drivers[name]()
-            best[name] = min(best[name], dt)
-    t_lock, t_dense, t_auto = best["lock"], best["dense"], best["auto"]
-    lock_out, dense_out, auto_out = outs["lock"], outs["dense"], outs["auto"]
+    best = time_rotated({
+        "lock": _time_lockstep,
+        "dense": lambda _r: _time_requests(eng_dense, requests),
+        "auto": lambda _r: _time_requests(eng_auto, requests)})
+    t_lock, lock_out = best["lock"]
+    t_dense, dense_out = best["dense"]
+    t_auto, auto_out = best["auto"]
     auto_stats = eng_auto.stats
 
     for i in range(len(requests)):  # same tokens, or the comparison is moot
@@ -257,28 +253,29 @@ def bench_ttft(seed: int = 0, impl: str = "rexp",
         "chunked_prefill_kernel": build(prefill_chunk, "pallas"),
         "monolithic": build(cache.max_context),
     }
-    best: dict[str, dict | None] = {name: None for name in engines}
-    order = list(engines)
-    for r in range(3):
-        for name in order[r:] + order[:r]:
-            eng = engines[name]
+
+    def make_driver(eng: ServingEngine):
+        def drive(_r):
             dt, out = _time_requests(eng, requests)
-            if best[name] is None or dt < best[name]["s"]:
-                ttfts = {i: out[i].ttft_s for i in range(len(requests))}
-                best[name] = {
-                    "s": dt,
-                    "ttft_mean_s": float(np.mean(list(ttfts.values()))),
-                    "ttft_long_mean_s": float(np.mean(
-                        [ttfts[i] for i in long_ids])),
-                    "ttft_short_mean_s": float(np.mean(
-                        [t for i, t in ttfts.items() if i not in long_ids])),
-                    "max_decode_gap_s": eng.stats.max_decode_gap_s,
-                    "prefill_steps": eng.stats.prefill_steps,
-                    "decode_steps": eng.stats.steps,
-                }
-    chunked = best["chunked"]
-    kernel = best["chunked_prefill_kernel"]
-    monolithic = best["monolithic"]
+            ttfts = {i: out[i].ttft_s for i in range(len(requests))}
+            return dt, {
+                "s": dt,
+                "ttft_mean_s": float(np.mean(list(ttfts.values()))),
+                "ttft_long_mean_s": float(np.mean(
+                    [ttfts[i] for i in long_ids])),
+                "ttft_short_mean_s": float(np.mean(
+                    [t for i, t in ttfts.items() if i not in long_ids])),
+                "max_decode_gap_s": eng.stats.max_decode_gap_s,
+                "prefill_steps": eng.stats.prefill_steps,
+                "decode_steps": eng.stats.steps,
+            }
+        return drive
+
+    best = time_rotated({name: make_driver(eng)
+                         for name, eng in engines.items()})
+    chunked = best["chunked"][1]
+    kernel = best["chunked_prefill_kernel"][1]
+    monolithic = best["monolithic"][1]
     return {
         "workload": {"n_short": len(shorts), "n_long": len(longs),
                      "long_prompt_tokens": [len(p) for p, _ in longs],
@@ -358,34 +355,40 @@ def bench_shared_prefix(seed: int = 0, impl: str = "rexp",
     eng_off.run(warm)
 
     sched = eng_on.scheduler
-    best = {"on": float("inf"), "off": float("inf")}
-    ttft = {}
-    sharing = {}
-    for r, reqs in enumerate(rounds):
-        pair = [("on", eng_on), ("off", eng_off)]
-        if r % 2:
-            pair.reverse()
-        outs = {}
-        for name, eng in pair:
+
+    def make_driver(name: str, eng: ServingEngine):
+        def drive(r):
+            reqs = rounds[r]
             # scheduler counters are cumulative across rounds — delta them
             c0 = (sched.prefix_hit_tokens, sched.pages_shared,
                   sched.cow_copies)
-            dt, outs[name] = _time_requests(eng, reqs)
-            if dt < best[name]:
-                best[name] = dt
-                ttft[name] = float(np.mean(
-                    [outs[name][i].ttft_s for i in range(len(reqs))]))
-                if name == "on":
-                    sharing = {
-                        "prompt_tokens": sum(len(p) for p, _ in reqs),
-                        "prefill_hit_tokens":
-                            sched.prefix_hit_tokens - c0[0],
-                        "pages_shared": sched.pages_shared - c0[1],
-                        "cow_copies": sched.cow_copies - c0[2],
-                    }
-        for i in range(len(reqs)):  # sharing must not change one token
-            np.testing.assert_array_equal(outs["on"][i].tokens,
-                                          outs["off"][i].tokens)
+            dt, out = _time_requests(eng, reqs)
+            payload = {
+                "out": out,
+                "ttft": float(np.mean(
+                    [out[i].ttft_s for i in range(len(reqs))])),
+            }
+            if name == "on":
+                payload["sharing"] = {
+                    "prompt_tokens": sum(len(p) for p, _ in reqs),
+                    "prefill_hit_tokens": sched.prefix_hit_tokens - c0[0],
+                    "pages_shared": sched.pages_shared - c0[1],
+                    "cow_copies": sched.cow_copies - c0[2],
+                }
+            return dt, payload
+        return drive
+
+    def check_round(r, payloads):
+        for i in range(len(rounds[r])):  # sharing must not change a token
+            np.testing.assert_array_equal(payloads["on"]["out"][i].tokens,
+                                          payloads["off"]["out"][i].tokens)
+
+    res = time_rotated({"on": make_driver("on", eng_on),
+                        "off": make_driver("off", eng_off)},
+                       after_round=check_round)
+    best = {name: s for name, (s, _) in res.items()}
+    ttft = {name: p["ttft"] for name, (_, p) in res.items()}
+    sharing = res["on"][1]["sharing"]
 
     useful = sum(m for _, m in rounds[0])
     return {
@@ -409,11 +412,13 @@ def bench_shared_prefix(seed: int = 0, impl: str = "rexp",
 
 def write_json(n_requests: int, n_slots: int, seed: int) -> dict:
     """Sweep every policy and record tokens/s per driver in
-    ``BENCH_serving.json`` (the cross-PR perf trajectory artifact)."""
+    ``BENCH_serving.json`` (the cross-PR perf trajectory artifact).
+    Only this benchmark's sections are replaced — the load generator's
+    ``open_loop`` / ``closed_loop_async`` records survive."""
     results = {impl: bench(n_requests=n_requests, n_slots=n_slots,
                            seed=seed, impl=impl)
                for impl in POLICIES}
-    doc = {
+    return merge_bench_json(JSON_PATH, {
         "bench": "serving_throughput",
         "workload": {"n_requests": n_requests, "n_slots": n_slots,
                      "seed": seed,
@@ -428,9 +433,7 @@ def write_json(n_requests: int, n_slots: int, seed: int) -> dict:
         } for impl, r in results.items()},
         "long_prompt_mixed": bench_ttft(seed=seed),
         "shared_prefix": bench_shared_prefix(seed=seed),
-    }
-    JSON_PATH.write_text(json.dumps(doc, indent=2) + "\n")
-    return doc
+    })
 
 
 def main() -> None:

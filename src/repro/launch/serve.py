@@ -7,7 +7,16 @@ technique.  Two drivers:
 * ``--engine lockstep``    — fixed-batch ``serve_loop.generate`` (every
   request shares one prompt length and finishes together);
 * ``--engine continuous``  — the paged-KV continuous-batching engine
-  (mixed prompt/output lengths share the decode batch; default).
+  (mixed prompt/output lengths share the decode batch; default);
+* ``--engine pipelined``   — the continuous engine with on-device
+  sampling and one-step-ahead dispatch (host scheduling overlaps
+  device compute; ``--pipeline-depth`` bounds the in-flight steps).
+
+``--serve`` switches from batch driving to the asyncio front-end
+(``runtime/server.py``): requests are submitted concurrently and
+consumed token by token through streaming handles, with admission
+control via ``--max-queue`` / ``--backpressure``, then the server shuts
+down cleanly.  Tokens are identical to the batch path either way.
 
 ``--prefill-chunk`` sizes the continuous engine's chunked paged
 prefill: prompts enter the page pool in fixed-size chunks (one compile
@@ -60,7 +69,21 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", default="continuous",
-                    choices=["lockstep", "continuous"])
+                    choices=["lockstep", "continuous", "pipelined"])
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="pipelined engine: max device steps in flight "
+                         "before the host blocks on a harvest (2 = "
+                         "double buffering)")
+    ap.add_argument("--serve", action="store_true",
+                    help="drive through the asyncio streaming front-end "
+                         "instead of the batch path")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="--serve: admission bound on requests waiting "
+                         "for a slot (default: unbounded)")
+    ap.add_argument("--backpressure", default="reject",
+                    choices=["reject", "wait"],
+                    help="--serve: at --max-queue, reject new requests "
+                         "(ServerSaturatedError) or make submitters wait")
     ap.add_argument("--paged-backend", default="auto",
                     choices=["auto", "pallas", "dense"],
                     help="continuous-engine paged attention (decode AND "
@@ -128,10 +151,13 @@ def main() -> None:
 
     engine_ok = (not arch.encoder_layers
                  and all(s.mixer == "attn" for s in arch.period))
-    use_engine = args.engine == "continuous" and engine_ok
-    if args.engine == "continuous" and not engine_ok:
+    use_engine = args.engine in ("continuous", "pipelined") and engine_ok
+    if args.engine in ("continuous", "pipelined") and not engine_ok:
         print("continuous engine serves attention-only decoder LMs; "
               "falling back to lockstep")
+    if args.serve and not use_engine:
+        ap.error("--serve requires the continuous or pipelined engine "
+                 "(the lockstep path has no scheduler to stream from)")
     if args.tp > 1 and not use_engine:
         # never report single-device lockstep numbers as a --tp run
         ap.error("--tp > 1 requires the continuous engine (attention-only "
@@ -155,13 +181,56 @@ def main() -> None:
             print(f"tensor-parallel tp={args.tp}: "
                   f"{paged_mesh_regime(mesh, arch.n_kv_heads)!r} regime "
                   f"(KVH={arch.n_kv_heads})")
-        eng = ServingEngine(model, params, run, EngineConfig(
+        from repro.runtime import PipelinedEngine
+        engine_cls = (PipelinedEngine if args.engine == "pipelined"
+                      else ServingEngine)
+        eng = engine_cls(model, params, run, EngineConfig(
             n_slots=args.batch, cache=cache,
             prefill_chunk=args.prefill_chunk,
             prefill_budget=args.prefill_budget,
             prefix_cache=args.prefix_cache,
+            pipeline_depth=args.pipeline_depth,
             mesh=mesh, shard_params=args.shard_params))
         rng = np.random.default_rng(args.seed)
+        if args.serve:
+            import asyncio
+            from repro.runtime import AsyncServingServer
+
+            async def serve_demo():
+                async with AsyncServingServer(
+                        eng, max_queue=args.max_queue,
+                        backpressure=args.backpressure) as srv:
+
+                    async def one(i: int):
+                        plen = max(1, int(rng.integers(
+                            args.prompt_len // 2, args.prompt_len + 1)))
+                        prompt = rng.integers(0, arch.vocab_size, size=plen)
+                        stream = await srv.submit(
+                            prompt, args.new_tokens,
+                            temperature=args.temperature,
+                            seed=args.seed + i)
+                        n = 0
+                        async for _tok in stream:
+                            n += 1
+                        res = await stream.result()
+                        print(f"request {res.request_id}: streamed {n} "
+                              f"tokens (ttft {res.ttft_s:.3f}s, "
+                              f"finish={res.finish_reason})")
+                        return res
+
+                    t0 = time.time()
+                    results = await asyncio.gather(
+                        *[one(i) for i in range(args.batch)])
+                    dt = time.time() - t0
+                    toks = sum(len(r.tokens) for r in results)
+                    print(f"policy={policy.impl}/{policy.precision} "
+                          f"streaming [{engine_cls.__name__}]: "
+                          f"{toks} tokens in {dt:.2f}s "
+                          f"({toks/dt:.1f} tok/s incl. compile)")
+                print("server: clean shutdown")
+
+            asyncio.run(serve_demo())
+            return
         # mixed lengths: the workload lockstep cannot batch.  With the
         # prefix cache on, every request shares a common preamble (the
         # system-prompt pattern the cache exists for) and the batch runs

@@ -4,15 +4,19 @@ from repro.runtime.train_loop import (TrainState, init_train_state,
                                       make_eval_step, make_loss_fn,
                                       make_train_step, cross_entropy)
 from repro.runtime.serve_loop import (generate, make_decode_step,
-                                      make_prefill_step, sample_token)
+                                      make_prefill_step, sample_token,
+                                      sample_tokens)
 from repro.runtime.paged_cache import (NULL_PAGE, DecodeView, OutOfPagesError,
                                        PageAllocator, PagedCacheConfig,
                                        PrefillChunkView, decode_view,
                                        padded_n_pages, pool_shape,
                                        prefill_chunk_view, view_arrays)
 from repro.runtime.prefix_cache import PrefixCache
-from repro.runtime.scheduler import Request, Scheduler, SeqState
+from repro.runtime.scheduler import (PENDING_TOKEN, Request, Scheduler,
+                                     SeqState)
 from repro.runtime.engine import (EngineConfig, EngineStats,
-                                  GenerationResult, RequestHandle,
-                                  ServingEngine)
+                                  GenerationResult, PipelinedEngine,
+                                  RequestHandle, ServingEngine)
+from repro.runtime.server import (AsyncServingServer, RequestStream,
+                                  ServerSaturatedError)
 from repro.runtime.fault_tolerance import ResilientTrainer, TrainerReport

@@ -43,7 +43,8 @@ import contextlib
 import dataclasses
 import time
 import warnings
-from typing import Sequence as SeqOf
+from collections import deque
+from typing import Callable, Sequence as SeqOf
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +55,9 @@ from repro.models.model_zoo import Model
 from repro.models import transformer as TF
 from repro.runtime.paged_cache import (PagedCacheConfig, decode_view,
                                        prefill_chunk_view, view_arrays)
-from repro.runtime.scheduler import Request, Scheduler, Sequence
+from repro.runtime.scheduler import (PENDING_TOKEN, Request, Scheduler,
+                                     SeqState, Sequence)
+from repro.runtime.serve_loop import sample_tokens
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +80,12 @@ class EngineConfig:
     jit: bool = True
     mesh: object = None              # jax.sharding.Mesh | None
     shard_params: bool = False
+    #: :class:`PipelinedEngine` only — max device steps in flight before
+    #: the host blocks on a harvest.  2 = classic double buffering (plan
+    #: step N+1 while step N computes); 1 degenerates to the synchronous
+    #: cadence (dispatch, harvest, dispatch, ...) but still samples
+    #: on-device.
+    pipeline_depth: int = 2
 
 
 class RequestHandle:
@@ -103,7 +112,7 @@ class RequestHandle:
     def result(self) -> "GenerationResult":
         """Drive the engine until this request finishes; its result."""
         while not self.done:
-            if not self._engine.scheduler.has_work():
+            if not self._engine.has_work():
                 raise RuntimeError(
                     f"request {self.id} cannot finish: engine has no work")
             self._engine.step()
@@ -182,6 +191,11 @@ class EngineStats:
     # whatever prefill work ran in between)
     max_decode_gap_s: float = 0.0
     wall_s: float = 0.0
+    # pipelined-engine counters (all zero on the synchronous engine):
+    speculative_wasted: int = 0  # dispatched slot-steps rolled back at EOS
+    inflight_peak: int = 0       # max device steps simultaneously in flight
+    queue_depth_peak: int = 0    # max waiting-queue depth observed
+    harvest_wait_s: float = 0.0  # host time blocked fetching step tokens
 
     @property
     def tokens(self) -> int:
@@ -192,7 +206,8 @@ class EngineStats:
 #: legacy ``ServingEngine(**kwargs)`` names accepted (deprecated) in
 #: place of an :class:`EngineConfig` — exactly the old signature.
 _LEGACY_ENGINE_KWARGS = frozenset(
-    f.name for f in dataclasses.fields(EngineConfig)) - {"prefix_cache"}
+    f.name for f in dataclasses.fields(EngineConfig)) - {"prefix_cache",
+                                                         "pipeline_depth"}
 
 
 class ServingEngine:
@@ -298,6 +313,8 @@ class ServingEngine:
         self._seqs: dict[int, Sequence] = {}
         self._t_added: dict[int, float] = {}
         self._ttft: dict[int, float] = {}
+        self._on_token: dict[int, Callable[[int], None]] = {}
+        self._n_streamed: dict[int, int] = {}
         self._last_decode_end: float | None = None
         self._next_id = 0
 
@@ -344,9 +361,17 @@ class ServingEngine:
 
     def add_request(self, prompt, max_new_tokens: int, *,
                     temperature: float = 0.0, seed: int = 0,
-                    eos_id: int | None = None) -> RequestHandle:
+                    eos_id: int | None = None,
+                    on_token: Callable[[int], None] | None = None,
+                    ) -> RequestHandle:
         """Queue a request; returns its :class:`RequestHandle` (which
-        hashes/compares as the bare integer id it used to return)."""
+        hashes/compares as the bare integer id it used to return).
+
+        ``on_token`` streams: it is called once per generated token, in
+        order, from whichever thread drives :meth:`step`.  Tokens
+        re-generated after an eviction are NOT re-emitted (replay is
+        deterministic, so the stream just resumes where it left off).
+        """
         rid = self._next_id
         self._next_id += 1
         self._seqs[rid] = self.scheduler.add(Request(
@@ -354,7 +379,17 @@ class ServingEngine:
             max_new_tokens=max_new_tokens, temperature=temperature,
             seed=seed, eos_id=eos_id))
         self._t_added[rid] = time.time()
+        if on_token is not None:
+            self._on_token[rid] = on_token
+            self._n_streamed[rid] = 0
+        self.stats.queue_depth_peak = max(self.stats.queue_depth_peak,
+                                          len(self.scheduler.waiting))
         return RequestHandle(rid, self)
+
+    def has_work(self) -> bool:
+        """Anything left to drive (queued, slotted, or — on the
+        pipelined engine — dispatched and awaiting harvest)."""
+        return self.scheduler.has_work()
 
     def step(self) -> list[GenerationResult]:
         """Admit + COW page copies + budgeted prefill chunks + one
@@ -375,12 +410,7 @@ class ServingEngine:
             decode = self.scheduler.decode_slots()  # eviction may shrink it
             if decode:
                 finished.extend(self._decode_step(decode))
-        # sync unconditionally: eviction counts must be visible even on
-        # steps where every slot drained (used to lag behind one step)
-        self.stats.preemptions = self.scheduler.n_preemptions
-        self.stats.prefix_hit_tokens = self.scheduler.prefix_hit_tokens
-        self.stats.pages_shared = self.scheduler.pages_shared
-        self.stats.cow_copies = self.scheduler.cow_copies
+        self._sync_sched_stats()
         return [self._record(seq) for seq in finished]
 
     def run(self, requests: SeqOf[tuple] | None = None,
@@ -398,7 +428,7 @@ class ServingEngine:
                 self.add_request(r[0], r[1])
         self._last_decode_end = None  # stall metric is per drive
         out: dict[int, GenerationResult] = {}
-        while self.scheduler.has_work():
+        while self.has_work():
             for res in self.step():
                 out[res.request_id] = res
         self.stats.wall_s += time.time() - t0
@@ -474,11 +504,10 @@ class ServingEngine:
         # stamp TTFT only now: np.asarray above blocked on the device, so
         # the first token actually exists (async dispatch would otherwise
         # exclude the final chunk's compute from the metric)
-        rid = seq.request.id
-        if rid not in self._ttft:
-            self._ttft[rid] = time.time() - self._t_added.get(rid,
-                                                              time.time())
-        return self.scheduler.on_token(seq, tok)
+        self._stamp_ttft(seq.request.id)
+        done = self.scheduler.on_token(seq, tok)
+        self._emit_new_tokens(seq)
+        return done
 
     def _decode_step(self, running: dict[int, Sequence]) -> list[Sequence]:
         """One batched decode step over the running slots."""
@@ -506,7 +535,46 @@ class ServingEngine:
             self.stats.decode_tokens += 1
             if self.scheduler.on_token(seq, tok):
                 finished.append(seq)
+            self._emit_new_tokens(seq)
         return finished
+
+    def _sync_sched_stats(self) -> None:
+        # sync unconditionally: eviction counts must be visible even on
+        # steps where every slot drained (used to lag behind one step)
+        self.stats.preemptions = self.scheduler.n_preemptions
+        self.stats.prefix_hit_tokens = self.scheduler.prefix_hit_tokens
+        self.stats.pages_shared = self.scheduler.pages_shared
+        self.stats.cow_copies = self.scheduler.cow_copies
+        self.stats.queue_depth_peak = max(self.stats.queue_depth_peak,
+                                          len(self.scheduler.waiting))
+
+    def _stamp_ttft(self, rid: int) -> None:
+        if rid in self._ttft:
+            return
+        # a missing admission timestamp would silently report ~0 TTFT
+        # through the old `.get(rid, time.time())` fallback — every path
+        # into the scheduler goes through add_request, so it's a bug
+        assert rid in self._t_added, \
+            f"request {rid} has no admission timestamp"
+        self._ttft[rid] = time.time() - self._t_added[rid]
+
+    def _emit_new_tokens(self, seq: Sequence) -> None:
+        """Stream resolved tokens past the per-request watermark."""
+        rid = seq.request.id
+        cb = self._on_token.get(rid)
+        if cb is None:
+            return
+        start = self._n_streamed.get(rid, 0)
+        emit = []
+        for tok in seq.generated[start:]:
+            if tok == PENDING_TOKEN:
+                break  # dispatched but not yet harvested
+            emit.append(tok)
+        # watermark BEFORE the callbacks: eviction replay regenerates
+        # tokens [0, start) bit-identically, so they must not re-emit
+        self._n_streamed[rid] = start + len(emit)
+        for tok in emit:
+            cb(tok)
 
     def _sample(self, seq: Sequence, logits_row: np.ndarray) -> int:
         req = seq.request
@@ -528,5 +596,316 @@ class ServingEngine:
             prefix_hit_tokens=seq.prefix_hit_tokens)
         self._t_added.pop(rid, None)           # state with the result
         self._seqs.pop(rid, None)
+        self._on_token.pop(rid, None)
+        self._n_streamed.pop(rid, None)
         self._results[rid] = res
         return res
+
+
+@dataclasses.dataclass
+class _InflightStep:
+    """One dispatched-but-unharvested device step."""
+
+    tokens: jax.Array    # (n_slots,) decode / (1,) final chunk, int32
+    #: (seq, index into ``tokens``, position in ``seq.generated`` this
+    #: token resolves, ``seq.n_evictions`` at dispatch) — the epoch lets
+    #: harvest drop tokens whose sequence was evicted after dispatch
+    #: (replay regenerates them bit-identically).
+    entries: list[tuple[Sequence, int, int, int]]
+    kind: str            # 'decode' | 'chunk'
+
+
+class PipelinedEngine(ServingEngine):
+    """:class:`ServingEngine` with host scheduling overlapped onto
+    device compute.
+
+    Two changes, same token streams:
+
+    * **On-device sampling.**  The decode / final-prefill-chunk programs
+      end in ``serve_loop.sample_tokens`` — greedy argmax or
+      ``categorical(fold_in(PRNGKey(seed), position))``, bitwise the
+      host path — so a step returns an ``(n_slots,)`` int32 token array
+      instead of shipping ``(n_slots, 1, V)`` logits across the host
+      boundary every token.
+    * **One-step-ahead dispatch.**  The step loop keeps up to
+      ``config.pipeline_depth`` device steps in flight: step N+1 is
+      planned and dispatched from step N's *dispatched-but-unfetched*
+      tokens, which live in a device-resident ``(n_slots,)`` last-token
+      buffer (each decode's sampled output IS the next decode's input —
+      the host never needs the values to plan).  Host-side bookkeeping
+      marks the speculated positions :data:`PENDING_TOKEN` and resolves
+      them when the step is harvested.
+
+    The speculation rule: **length**-finishes are known at dispatch
+    (token count, not token value) and retire the slot immediately;
+    **EOS** is only visible one harvest later, so a sequence that hits
+    EOS has dispatched at most ONE extra slot-step, which harvest rolls
+    back (truncating the speculated tail — ``stats.speculative_wasted``
+    counts the waste).  Eviction during speculation is handled by
+    epoch-tagging in-flight tokens: stale ones are dropped and replay
+    regenerates them identically.  Page reuse across in-flight steps is
+    safe because the pool arrays thread functionally through the jitted
+    steps — step N+1's writes cannot be reordered before step N's reads.
+
+    Token streams are identical to :class:`ServingEngine` (and lockstep
+    ``generate``) by the same invariances the test suite pins for the
+    sync engine: sampling keys off ``(seed, position)`` only, and
+    batch-composition / eviction-replay / page-placement invariance make
+    the altered *scheduling* unobservable in the output.
+    """
+
+    def __init__(self, model: Model, params, run: RunConfig,
+                 config: EngineConfig | None = None, **kwargs):
+        super().__init__(model, params, run, config, **kwargs)
+        config = self.config
+        if config.pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth {config.pipeline_depth} < 1")
+        self.depth = config.pipeline_depth
+        self._inflight: deque[_InflightStep] = deque()
+
+        # `greedy` is static under jit: an all-greedy batch compiles a
+        # variant with no threefry/gumbel work at all (two traces max)
+        def decode_sampled_fn(params, tokens, pools, block_tables, lengths,
+                              seeds, positions, temps, greedy):
+            logits, new_pools = model.decode_step_paged(
+                params, tokens[:, None], pools, block_tables, lengths, run)
+            return (sample_tokens(logits, seeds, positions, temps,
+                                  greedy=greedy), new_pools)
+
+        def chunk_sampled_fn(params, tokens, pools, block_tables,
+                             cache_lens, chunk_lens, seeds, positions,
+                             temps, greedy):
+            logits, new_pools = model.prefill_chunk_paged(
+                params, tokens, pools, block_tables, cache_lens, chunk_lens,
+                run)
+            return (sample_tokens(logits, seeds, positions, temps,
+                                  greedy=greedy), new_pools)
+
+        def set_tok_fn(buf, slot, tok):
+            # write a final-chunk first token into the last-token buffer
+            # (slot is a traced scalar: one compile serves every slot)
+            return buf.at[slot].set(tok[0])
+
+        jit = config.jit
+        if jit and self.mesh is not None:
+            from repro.runtime import partitioning as PT
+            rep = PT.replicated_sharding(self.mesh)
+            pool_sh = jax.tree_util.tree_map(
+                lambda _: PT.paged_pool_sharding(self.mesh,
+                                                 model.cfg.n_kv_heads,
+                                                 stacked=True), self.pools)
+            self._decode_sampled_fn = jax.jit(
+                decode_sampled_fn, donate_argnums=(2,), static_argnums=(8,),
+                out_shardings=(rep, pool_sh))
+            self._chunk_sampled_fn = jax.jit(
+                chunk_sampled_fn, donate_argnums=(2,), static_argnums=(9,),
+                out_shardings=(rep, pool_sh))
+            self._set_tok_fn = jax.jit(set_tok_fn, out_shardings=rep)
+            self._token_buf = jax.device_put(
+                np.zeros((self.n_slots,), np.int32), rep)
+        else:
+            if jit:
+                self._decode_sampled_fn = jax.jit(decode_sampled_fn,
+                                                  donate_argnums=(2,),
+                                                  static_argnums=(8,))
+                self._chunk_sampled_fn = jax.jit(chunk_sampled_fn,
+                                                 donate_argnums=(2,),
+                                                 static_argnums=(9,))
+                self._set_tok_fn = jax.jit(set_tok_fn)
+            else:
+                self._decode_sampled_fn = decode_sampled_fn
+                self._chunk_sampled_fn = chunk_sampled_fn
+                self._set_tok_fn = set_tok_fn
+            self._token_buf = jnp.zeros((self.n_slots,), jnp.int32)
+        # an all-greedy step never reads the sampling metadata: reuse
+        # cached zero arrays instead of three device_puts per dispatch
+        self._zero_meta_decode = self._put_sample_meta(
+            [0] * self.n_slots, [0] * self.n_slots, [0.0] * self.n_slots)
+        self._zero_meta_chunk = self._put_sample_meta([0], [0], [0.0])
+
+    # -- small host→device helpers ----------------------------------------
+
+    def _put(self, a: np.ndarray):
+        if self.mesh is None:
+            return jnp.asarray(a)
+        from repro.runtime import partitioning as PT
+        return jax.device_put(a, PT.replicated_sharding(self.mesh))
+
+    def _put_sample_meta(self, seeds, positions, temps):
+        return (self._put(np.asarray(seeds, np.int32)),
+                self._put(np.asarray(positions, np.int32)),
+                self._put(np.asarray(temps, np.float32)))
+
+    # -- step loop ---------------------------------------------------------
+
+    def step(self) -> list[GenerationResult]:
+        """Harvest until under the in-flight cap, dispatch one step's
+        plan, and — when there was nothing to dispatch — drain one
+        in-flight step so the loop always makes progress.
+        """
+        finished: list[Sequence] = []
+        while len(self._inflight) >= self.depth:
+            finished.extend(self._harvest())
+        if not self._dispatch() and self._inflight:
+            finished.extend(self._harvest())
+        self._sync_sched_stats()
+        return [self._record(seq) for seq in finished]
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work() or bool(self._inflight)
+
+    # -- dispatch (plan one step ahead) ------------------------------------
+
+    def _dispatch(self) -> bool:
+        """Plan and launch one engine step's device work (admission,
+        COW copies, budgeted prefill chunks, one decode batch) without
+        waiting for any of it.  False when there was nothing to do."""
+        dispatched = False
+        while self.scheduler.try_admit() is not None:
+            pass
+        self._run_pending_copies()
+        for seq, n in self.scheduler.plan_prefill(self.prefill_chunk,
+                                                  self.prefill_budget):
+            self._dispatch_chunk(seq, n)
+            dispatched = True
+        if self.scheduler.decode_slots():
+            self.scheduler.grow_for_decode()
+            decode = self.scheduler.decode_slots()  # eviction may shrink it
+            if decode:
+                self._dispatch_decode(decode)
+                dispatched = True
+        return dispatched
+
+    def _dispatch_chunk(self, seq: Sequence, n: int) -> None:
+        """Launch one prompt chunk; the final chunk fuses first-token
+        sampling and joins the in-flight queue."""
+        final = seq.prefilled + n == seq.prompt_len
+        view = view_arrays(
+            prefill_chunk_view(seq, n, self.prefill_chunk, self.cache),
+            self.mesh)
+        if not final:
+            with self._mesh_ctx():
+                _, self.pools = self._chunk_fn(
+                    self.params, view.tokens, self.pools, view.block_tables,
+                    view.cache_lens, view.chunk_lens)
+            self.stats.prefill_steps += 1
+            self.stats.prompt_tokens += n
+            self.scheduler.on_prefill_chunk(seq, n)
+            return
+        req = seq.request
+        greedy = req.temperature <= 0.0
+        if greedy:
+            seeds, positions, temps = self._zero_meta_chunk
+        else:
+            # the first token samples at position 0 — len(seq.generated)
+            # is 0 here even on re-admission (eviction cleared it)
+            seeds, positions, temps = self._put_sample_meta(
+                [req.seed], [0], [req.temperature])
+        with self._mesh_ctx():
+            toks, self.pools = self._chunk_sampled_fn(
+                self.params, view.tokens, self.pools, view.block_tables,
+                view.cache_lens, view.chunk_lens, seeds, positions, temps,
+                greedy)
+        self.stats.prefill_steps += 1
+        self.stats.prompt_tokens += n
+        self.scheduler.on_prefill_chunk(seq, n)   # → RUNNING, owns a slot
+        self.stats.prefills += 1
+        self.stats.first_tokens += 1
+        self._token_buf = self._set_tok_fn(self._token_buf,
+                                           self._put(np.int32(seq.slot)),
+                                           toks)
+        self._push_inflight(toks, [(seq, 0, 0, seq.n_evictions)], "chunk")
+        self.scheduler.on_token_speculative(seq)
+
+    def _dispatch_decode(self, running: dict[int, Sequence]) -> None:
+        """Launch one batched decode step from the device-resident
+        last-token buffer."""
+        # the view is built BEFORE the speculative append: lengths must
+        # count only tokens whose K/V the pool already holds (plus the
+        # input token, written by this step) — exactly the sync math
+        view = view_arrays(decode_view(running, self.n_slots, self.cache),
+                           self.mesh)
+        seeds = [0] * self.n_slots
+        positions = [0] * self.n_slots
+        temps = [0.0] * self.n_slots
+        entries = []
+        for slot, seq in running.items():
+            req = seq.request
+            seeds[slot] = req.seed
+            positions[slot] = len(seq.generated)
+            temps[slot] = req.temperature
+            entries.append((seq, slot, len(seq.generated), seq.n_evictions))
+        greedy = all(t <= 0.0 for t in temps)
+        if greedy:
+            s, p, t = self._zero_meta_decode
+        else:
+            s, p, t = self._put_sample_meta(seeds, positions, temps)
+        with self._mesh_ctx():
+            toks, self.pools = self._decode_sampled_fn(
+                self.params, self._token_buf, self.pools, view.block_tables,
+                view.lengths, s, p, t, greedy)
+        # the sampled batch IS the next step's input buffer: empty slots
+        # get garbage tokens, but their rows are dead (null block table,
+        # zero length) and a slot re-admission overwrites via the final
+        # chunk's _set_tok_fn before the slot decodes again
+        self._token_buf = toks
+        self.stats.steps += 1
+        self.stats.decode_tokens += len(running)
+        self._push_inflight(toks, entries, "decode")
+        for seq in running.values():
+            self.scheduler.on_token_speculative(seq)
+
+    def _push_inflight(self, toks, entries, kind: str) -> None:
+        if hasattr(toks, "copy_to_host_async"):
+            toks.copy_to_host_async()  # overlap D2H with the next dispatch
+        self._inflight.append(_InflightStep(toks, entries, kind))
+        self.stats.inflight_peak = max(self.stats.inflight_peak,
+                                       len(self._inflight))
+
+    # -- harvest (resolve one step late) -----------------------------------
+
+    def _harvest(self) -> list[Sequence]:
+        """Fetch the oldest in-flight step's tokens and resolve them.
+
+        Returns sequences that finished AND have no pending positions
+        left (i.e. are ready to record).
+        """
+        rec = self._inflight.popleft()
+        t0 = time.time()
+        host = np.asarray(rec.tokens)  # (n,) int32 — never full logits
+        now = time.time()
+        self.stats.harvest_wait_s += now - t0
+        if rec.kind == "decode":
+            # completion-to-completion stall metric, as in the sync path
+            if self._last_decode_end is not None:
+                self.stats.max_decode_gap_s = max(
+                    self.stats.max_decode_gap_s,
+                    now - self._last_decode_end)
+            self._last_decode_end = now
+        done: list[Sequence] = []
+        for seq, bidx, idx, epoch in rec.entries:
+            if seq.n_evictions != epoch:
+                continue  # evicted after dispatch; replay regenerates it
+            gen = seq.generated
+            if idx >= len(gen) or gen[idx] != PENDING_TOKEN:
+                continue  # rolled back by an earlier EOS resolution
+            tok = int(host[bidx])
+            gen[idx] = tok
+            req = seq.request
+            if idx == 0:
+                self._stamp_ttft(req.id)
+            if req.eos_id is not None and tok == req.eos_id:
+                # EOS surfaced one step late: drop the speculated tail
+                # (at most one slot-step per the dispatch rule)
+                wasted = len(gen) - (idx + 1)
+                del gen[idx + 1:]
+                self.stats.speculative_wasted += wasted
+                if seq.state is not SeqState.FINISHED:
+                    self.scheduler.finish(seq, "eos")
+                else:
+                    seq.finish_reason = "eos"  # length-cut was also EOS
+            self._emit_new_tokens(seq)
+            if (seq.state is SeqState.FINISHED
+                    and PENDING_TOKEN not in gen):
+                done.append(seq)
+        return done

@@ -31,6 +31,12 @@ from repro.runtime.paged_cache import (OutOfPagesError, PageAllocator,
                                        PagedCacheConfig)
 from repro.runtime.prefix_cache import PrefixCache
 
+#: Placeholder the pipelined engine appends for a dispatched-but-unfetched
+#: token (real token ids are ≥ 0).  Length accounting (page growth, the
+#: max_new_tokens cut-off) treats it as real; the engine overwrites it with
+#: the sampled id at harvest, or truncates it on a late EOS rollback.
+PENDING_TOKEN = -1
+
 
 @dataclasses.dataclass(frozen=True)
 class Request:
@@ -371,13 +377,36 @@ class Scheduler:
         done = (len(seq.generated) >= req.max_new_tokens
                 or (req.eos_id is not None and token == req.eos_id))
         if done:
-            seq.finish_reason = ("eos" if req.eos_id is not None
-                                 and token == req.eos_id else "length")
-            self.allocator.free(seq.pages)
-            seq.pages = []
-            if seq.slot is not None:
-                self.running.pop(seq.slot)
-                self._free_slots.append(seq.slot)
-                seq.slot = None
-            seq.state = SeqState.FINISHED
+            self.finish(seq, "eos" if req.eos_id is not None
+                        and token == req.eos_id else "length")
         return done
+
+    def finish(self, seq: Sequence, reason: str) -> None:
+        """Retire a sequence: free its pages, release its slot."""
+        seq.finish_reason = reason
+        self.allocator.free(seq.pages)
+        seq.pages = []
+        if seq.slot is not None:
+            self.running.pop(seq.slot)
+            self._free_slots.append(seq.slot)
+            seq.slot = None
+        seq.state = SeqState.FINISHED
+
+    def on_token_speculative(self, seq: Sequence) -> bool:
+        """Record a dispatched-but-unfetched token as :data:`PENDING_TOKEN`.
+
+        The pipelined engine calls this at *dispatch* time, before the
+        sampled id has crossed back to the host.  Length-based finishes
+        are decided here — ``len(generated)`` is known without the token
+        value, so the slot and pages are released immediately and the
+        next dispatch can reuse them (pool-array threading through the
+        jitted steps orders the reuse after the in-flight read).  EOS
+        can only be detected at harvest, one step late: the engine then
+        truncates the speculated tail and calls :meth:`finish` itself.
+        Returns True when the sequence finished (by length) here.
+        """
+        seq.generated.append(PENDING_TOKEN)
+        if len(seq.generated) >= seq.request.max_new_tokens:
+            self.finish(seq, "length")
+            return True
+        return False

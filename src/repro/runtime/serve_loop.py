@@ -41,6 +41,43 @@ def sample_token(logits: Array, key, temperature: float = 0.0) -> Array:
     return tok[:, None].astype(jnp.int32)
 
 
+def sample_tokens(logits: Array, seeds: Array, positions: Array,
+                  temperatures: Array, *, greedy: bool = False) -> Array:
+    """Batched per-slot sampling, on device: logits (B, 1, V) → (B,) int32.
+
+    Bitwise the engine's per-request host path
+    (``ServingEngine._sample``): greedy ``argmax`` at temperature ≤ 0,
+    else ``categorical(fold_in(PRNGKey(seed), position), logits / t)``
+    — each row draws from its own ``(seed, position)`` key stream, so
+    slot assignment, batch composition and *where* the sampling runs
+    (host loop vs this fused device program) are all invisible to the
+    token stream.  Meant to be fused onto the decode / last-chunk step
+    so the step returns ``(B,)`` token ids instead of shipping the full
+    ``(B, 1, V)`` logits to the host.
+
+    ``greedy=True`` (a *static* flag under jit) promises every row has
+    temperature ≤ 0 and skips the categorical branch entirely — the
+    per-row threefry + gumbel work over the full vocab is far from free
+    on small models, and greedy rows take the argmax either way, so the
+    two variants are bitwise-interchangeable where both apply.
+    """
+    rows = logits[:, 0, :]
+    argmax = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+    if greedy:
+        return argmax
+    # rows the where() discards still flow through categorical: divide
+    # by 1 instead of 0 so no inf/nan is ever materialized
+    safe_t = jnp.where(temperatures > 0.0, temperatures,
+                       jnp.ones_like(temperatures))
+
+    def one(row, seed, pos, temp):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        return jax.random.categorical(key, row / temp).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(rows, seeds, positions, safe_t)
+    return jnp.where(temperatures > 0.0, sampled, argmax)
+
+
 def generate(model: Model, params, prompt: Array, run: RunConfig, *,
              max_new_tokens: int, max_len: int | None = None,
              encoder_input=None, temperature: float = 0.0, seed: int = 0,

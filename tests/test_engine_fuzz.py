@@ -22,7 +22,8 @@ import pytest
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
-from repro.runtime import EngineConfig, PagedCacheConfig, ServingEngine
+from repro.runtime import (EngineConfig, PagedCacheConfig, PipelinedEngine,
+                           ServingEngine)
 from repro.runtime.serve_loop import generate
 
 CHUNK = 4
@@ -81,7 +82,9 @@ def _drive(engine, schedule):
             rids.append(engine.add_request(**pending.popleft()[1]))
         for res in engine.step():
             out[res.request_id] = res
-        if not pending and not engine.scheduler.has_work():
+        # engine.has_work, not scheduler.has_work: the pipelined engine
+        # still owes harvests after the scheduler drains
+        if not pending and not engine.has_work():
             return out, rids
         assert step < 10_000, "engine failed to drain the schedule"
 
@@ -249,3 +252,66 @@ def test_fuzz_batch_composition_invariance(tiny_lm):
                          prefill_chunk=CHUNK)).run([dict(kw)])
         np.testing.assert_array_equal(out[rid].tokens, solo[0].tokens,
                                       err_msg=f"request {rid}")
+
+
+# ---------------------------------------------------------------------------
+# Pipelined engine: same schedules, one-step-ahead dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["exact", "rexp", "lut2d"])
+@pytest.mark.parametrize("seed,cache", [(4, ROOMY), (8, TINY), (11, TINY)])
+def test_fuzz_pipelined_matches_sync(tiny_lm, impl, seed, cache):
+    """Acceptance: the pipelined engine (fused on-device sampling,
+    speculative one-step-ahead dispatch, late EOS/eviction resolution)
+    is token-identical to the sync engine on fuzzed schedules —
+    staggered arrivals, ragged lengths, greedy AND sampled requests,
+    eviction pressure under the tiny pool."""
+    model, params = tiny_lm
+    run = _run_cfg(impl)
+    rng = np.random.default_rng(seed)
+    sched = _schedule(rng, n_reqs=7, cache=cache,
+                      temperatures=(0.0, 0.9))
+    cfg = EngineConfig(n_slots=2, cache=cache, prefill_chunk=CHUNK)
+    out_s, rids = _drive(ServingEngine(model, params, run, cfg),
+                         list(sched))
+    pipe = PipelinedEngine(model, params, run, cfg)
+    out_p, _ = _drive(pipe, list(sched))
+    assert sorted(out_p) == sorted(rids)
+    if cache is TINY:
+        assert pipe.stats.preemptions > 0, \
+            "tiny pool never exercised eviction — fuzz lost its teeth"
+    assert pipe.scheduler.allocator.n_free == cache.usable_pages
+    for rid in out_s:
+        np.testing.assert_array_equal(
+            out_p[rid].tokens, out_s[rid].tokens,
+            err_msg=f"seed {seed} impl {impl} request {rid}")
+        assert out_p[rid].finish_reason == out_s[rid].finish_reason
+
+
+@pytest.mark.parametrize("seed", [10, 12])
+def test_fuzz_pipelined_shared_prefix_matches_sync(tiny_lm, seed):
+    """Acceptance: speculation composes with copy-on-write prefix
+    sharing — warm-trie hits, duplicate prompts, eviction landing on
+    shared pages — without perturbing a single token vs the sync
+    engine under the identical schedule."""
+    model, params = tiny_lm
+    run = _run_cfg("lut2d")
+    rng = np.random.default_rng(seed)
+    sched = _shared_prefix_schedule(rng, n_reqs=7, cache=TINY,
+                                    temperatures=(0.0, 0.8))
+    cfg = EngineConfig(n_slots=2, cache=TINY, prefill_chunk=CHUNK,
+                       prefix_cache=True)
+    out_s, rids = _drive(ServingEngine(model, params, run, cfg),
+                         list(sched))
+    pipe = PipelinedEngine(model, params, run, cfg)
+    out_p, _ = _drive(pipe, list(sched))
+    assert sorted(out_p) == sorted(rids)
+    assert pipe.stats.prefix_hit_tokens > 0, \
+        "schedule never hit the prefix cache — fuzz lost its teeth"
+    assert pipe.stats.preemptions > 0, \
+        "tiny pool never exercised eviction — fuzz lost its teeth"
+    for rid in out_s:
+        np.testing.assert_array_equal(
+            out_p[rid].tokens, out_s[rid].tokens,
+            err_msg=f"seed {seed} request {rid}")

@@ -189,6 +189,50 @@ def test_tp_engine_token_identical_pages_regime():
                                                              heads=4))
 
 
+_PIPELINED_IDENTITY = r"""
+from repro.runtime import PipelinedEngine
+kvh = {kvh}
+arch, model, params = small_model(kvh, heads={heads})
+rng = np.random.default_rng(4)
+reqs = [dict(prompt=rng.integers(0, 128, size=int(l)).tolist(),
+             max_new_tokens=int(m), temperature=float(t), seed=i)
+        for i, (l, m, t) in enumerate(
+            [(9, 7, 0.0), (21, 6, 0.9), (4, 8, 0.0), (14, 5, 1.1)])]
+for impl in ['exact', 'lut2d']:
+    run = run_cfg(impl)
+    cfg = EngineConfig(n_slots=3, cache=CACHE, prefill_chunk=5)
+    ref = ServingEngine(model, params, run, cfg).run(
+        [dict(r) for r in reqs])
+    pipe = PipelinedEngine(model, params, run,
+                           dataclasses.replace(cfg, mesh=mesh))
+    out = pipe.run([dict(r) for r in reqs])
+    assert pipe.tp == 4
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(
+            out[i].tokens, ref[i].tokens,
+            err_msg=f'{{impl}} request {{i}} (kvh={kvh})')
+        assert out[i].finish_reason == ref[i].finish_reason
+print('TP-PIPELINED-OK')
+"""
+
+
+def test_tp_pipelined_engine_token_identical_heads_regime():
+    """Acceptance: the pipelined engine on a 4-way mesh (KV-head-
+    sharded pool) — fused on-device sampling over replicated logits,
+    the device-resident token buffer, and speculative harvests are all
+    token-identical to the single-device *sync* engine, greedy and
+    sampled requests alike."""
+    assert "TP-PIPELINED-OK" in run_py(
+        _PIPELINED_IDENTITY.format(kvh=4, heads=4))
+
+
+def test_tp_pipelined_engine_token_identical_pages_regime():
+    """Acceptance: same, on the pages regime (KVH = 1, page-slab
+    partial reductions under the fused sampled step)."""
+    assert "TP-PIPELINED-OK" in run_py(
+        _PIPELINED_IDENTITY.format(kvh=1, heads=4))
+
+
 def test_tp_engine_evictions_and_staggered_arrivals():
     """The sharded engine composes with the scheduler: staggered
     arrivals + a pool small enough to force eviction/replay still
