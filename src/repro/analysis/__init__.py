@@ -1,0 +1,60 @@
+"""Static analysis over the engine's compiled artifacts.
+
+Three layers, composable and individually importable:
+
+* :mod:`repro.analysis.hlo_guard` — predicates over optimized HLO text:
+  collective census (op, wire bytes, group size, inside-while flag),
+  donation aliasing, device→host transfers.
+* :mod:`repro.analysis.jaxpr_lint` — closed-jaxpr walks: LUT integer-Σ
+  upcast taint analysis, host callbacks, logits-shaped outputs.
+* :mod:`repro.analysis.contracts` — per-compiled-step invariant specs
+  and the checker behind ``python -m repro.analysis --check-all``
+  (report committed as ``ANALYSIS_contracts.json``).
+
+The repo-rule AST lint lives in ``tools/lint_repro.py`` (stdlib-only, no
+jax import) rather than here.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.hlo_guard import (CollectiveOp, CollectiveStats,
+                                      assert_collective_budget,
+                                      assert_donated,
+                                      assert_no_host_transfers,
+                                      collective_budget_violations,
+                                      collective_census, collectives_summary,
+                                      donated_params, donation_violations,
+                                      host_transfer_violations,
+                                      parse_collectives)
+from repro.analysis.jaxpr_lint import (UpcastViolation, host_callback_eqns,
+                                       iter_eqns, logits_escapes,
+                                       lut_upcast_violations, trace_step)
+
+__all__ = [
+    "CollectiveOp", "CollectiveStats", "assert_collective_budget",
+    "assert_donated", "assert_no_host_transfers",
+    "collective_budget_violations", "collective_census",
+    "collectives_summary", "donated_params", "donation_violations",
+    "host_transfer_violations", "parse_collectives",
+    "UpcastViolation", "host_callback_eqns", "iter_eqns", "logits_escapes",
+    "lut_upcast_violations", "trace_step",
+    "compile_count", "assert_compile_count",
+]
+
+
+def compile_count(fn) -> int:
+    """Number of distinct compilations a jitted function has performed.
+
+    Thin wrapper over ``jax.jit``'s ``_cache_size`` so one-compile pins
+    read as analyzer assertions rather than private-attr pokes.
+    """
+    return fn._cache_size()
+
+
+def assert_compile_count(fn, expected: int, what: str = "step") -> None:
+    got = compile_count(fn)
+    if got != expected:
+        raise AssertionError(
+            f"{what}: expected exactly {expected} compilation(s), "
+            f"observed {got} — a shape or dtype is leaking into the "
+            f"jit cache key")

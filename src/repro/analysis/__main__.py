@@ -1,0 +1,126 @@
+"""``python -m repro.analysis`` — compiled-artifact contract checker.
+
+Modes:
+
+* ``--check-all``      single-device contracts, plus the TP contracts in a
+                       ``--xla_force_host_platform_device_count=4``
+                       subprocess (or inline when >= 4 devices are
+                       already visible).
+* ``--single-only`` / ``--tp-only``  restrict to one half (the CI matrix
+                       and the self-spawned subprocess use these).
+* ``--json PATH|-``    write the machine-readable report (``-`` = stdout).
+* ``--update``         rewrite the committed ``ANALYSIS_contracts.json``.
+* ``--diff PATH``      ratchet against a committed report: violations may
+                       only decrease, contracts may not disappear.
+
+Exit codes: 0 all contracts hold (and ratchet passes), 1 contract
+violations, 2 ratchet regression or harness failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def _repo_root() -> pathlib.Path:
+    # src/repro/analysis/__main__.py -> repo root is parents[3]
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def _run_tp_subprocess(devices: int) -> dict:
+    """Self-spawn the TP half under a forced multi-device CPU."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(_repo_root() / "src"),
+                    env.get("PYTHONPATH", "")) if p)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--check-all",
+         "--tp-only", "--json", "-"],
+        env=env, capture_output=True, text=True, timeout=900)
+    if out.returncode not in (0, 1):
+        raise RuntimeError(
+            f"TP contract subprocess failed (rc={out.returncode}):\n"
+            f"{out.stdout}\n{out.stderr}")
+    return json.loads(out.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--check-all", action="store_true",
+                    help="evaluate the contract suite")
+    ap.add_argument("--single-only", action="store_true",
+                    help="only the single-device contracts")
+    ap.add_argument("--tp-only", action="store_true",
+                    help="only the 4-way-mesh contracts (needs >= 4 "
+                         "devices; --check-all self-spawns them otherwise)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the report as JSON ('-' for stdout)")
+    ap.add_argument("--update", action="store_true",
+                    help=f"rewrite the committed report "
+                         f"(ANALYSIS_contracts.json)")
+    ap.add_argument("--diff", metavar="PATH",
+                    help="ratchet the fresh report against a committed one")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced device count for the TP half (default 4)")
+    args = ap.parse_args(argv)
+    if not args.check_all:
+        ap.error("nothing to do: pass --check-all")
+    if args.single_only and args.tp_only:
+        ap.error("--single-only and --tp-only are mutually exclusive")
+
+    from repro.analysis import contracts
+
+    reports = []
+    if not args.tp_only:
+        reports.append(contracts.build_report(
+            contracts.single_device_contracts()))
+    if not args.single_only:
+        import jax
+        if len(jax.devices()) >= 4:
+            reports.append(contracts.build_report(contracts.tp_contracts()))
+        elif args.tp_only:
+            print("error: --tp-only needs >= 4 devices "
+                  "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+                  file=sys.stderr)
+            return 2
+        else:
+            reports.append(_run_tp_subprocess(args.devices))
+    report = contracts.merge_reports(*reports)
+
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.json == "-":
+        print(text)
+    else:
+        if args.json:
+            pathlib.Path(args.json).write_text(text + "\n")
+        for c in report["contracts"]:
+            mark = "ok " if c["status"] == "ok" else "FAIL"
+            print(f"[{mark}] {c['name']}", file=sys.stderr)
+            for v in c["violations"]:
+                print(f"       {v}", file=sys.stderr)
+    if args.update:
+        contracts.dump_report(report, str(_repo_root() / contracts.REPORT_NAME))
+        print(f"wrote {contracts.REPORT_NAME}", file=sys.stderr)
+
+    rc = 0 if report["n_violations"] == 0 else 1
+    if args.diff:
+        problems = contracts.ratchet_violations(
+            contracts.load_report(args.diff), report)
+        for p in problems:
+            print(p, file=sys.stderr)
+        if problems:
+            return 2
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,385 @@
+"""Per-compiled-step invariant contracts for the serving engine.
+
+Each :class:`ContractSpec` names one jitted step of the engine (decode,
+prefill chunk, fused-sampling final chunk / decode, COW page copy) on
+one topology (single device, TP 'heads', TP 'pages') and declares the
+structural invariants its compiled artifact must satisfy:
+
+* the pool pytree is donated (``input_output_alias`` present for at
+  least every pool leaf) — the in-place KV update intent;
+* no host callbacks and no device→host transfer ops inside the step;
+* the LUT integer-Σ datapath is never upcast outside the sanctioned
+  dequant scopes (:func:`repro.analysis.jaxpr_lint.lut_upcast_violations`);
+* fused-sampling steps return token vectors — no logits-shaped
+  ``(…, V)`` output escapes (PR 7's hot-path gate, static form);
+* collective budgets: none at all on a single device; on TP meshes the
+  PR 5 gate — no KV-sized all-gather, total result bytes within the
+  (B, H, 1) partial budget, and the 'pages' regime must psum.
+
+``python -m repro.analysis --check-all`` evaluates every contract that
+fits the visible device count and diffs the machine-readable report
+against the committed ``ANALYSIS_contracts.json`` (a ratchet: violations
+may only decrease).  The engine geometry used here is the test suite's
+small qwen3 scale-down — the contracts pin program *structure*, which is
+scale-invariant, so small compiles are enough.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.analysis import hlo_guard, jaxpr_lint
+
+REPORT_VERSION = 1
+REPORT_NAME = "ANALYSIS_contracts.json"
+
+# the test suite's small serving geometry (tests/test_engine_tp.py)
+_D_MODEL, _HEADS, _VOCAB, _PERIODS = 64, 4, 128, 2
+_N_SLOTS = 3
+_CACHE = dict(n_pages=30, page_size=8, max_pages_per_seq=8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractSpec:
+    """Declared invariants of one compiled engine step."""
+
+    name: str
+    topology: str            # 'single' | 'tp-heads' | 'tp-pages'
+    step: str                # 'decode' | 'prefill-chunk' | 'decode-sampled'
+    #                        # | 'final-chunk-sampled' | 'cow-copy'
+    policy: str              # softmax impl traced ('rexp' | 'lut2d' | ...)
+    min_donated: int = 0     # >= this many inputs aliased to outputs
+    lut_int_clean: bool = False
+    forbid_host_callbacks: bool = True
+    forbid_host_transfers: bool = True
+    forbid_logits_output: bool = False   # no (…, V) rank>=2 outputs
+    max_collective_tensor_bytes: int | None = None
+    max_op_tensor_bytes: tuple = ()      # ((op, cap), ...) — kept hashable
+    require_collectives: tuple = ()
+    notes: str = ""
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ContractSpec":
+        d = dict(d)
+        d["max_op_tensor_bytes"] = tuple(
+            tuple(x) for x in d.get("max_op_tensor_bytes", ()))
+        d["require_collectives"] = tuple(d.get("require_collectives", ()))
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ContractResult:
+    spec: ContractSpec
+    violations: list[str]
+    info: dict
+
+    @property
+    def status(self) -> str:
+        return "ok" if not self.violations else "violation"
+
+    def to_dict(self) -> dict:
+        return {"name": self.spec.name, "topology": self.spec.topology,
+                "step": self.spec.step, "status": self.status,
+                "violations": list(self.violations), "info": self.info}
+
+
+def check_artifacts(spec: ContractSpec, jaxpr, compiled_text: str,
+                    vocab: int = _VOCAB) -> ContractResult:
+    """Evaluate one spec against a traced jaxpr + compiled-HLO text."""
+    v: list[str] = []
+    if spec.min_donated:
+        v += hlo_guard.donation_violations(compiled_text, spec.min_donated)
+    if spec.forbid_host_transfers:
+        v += hlo_guard.host_transfer_violations(compiled_text)
+    caps = dict(spec.max_op_tensor_bytes)
+    if (spec.max_collective_tensor_bytes is not None or caps
+            or spec.require_collectives):
+        v += hlo_guard.collective_budget_violations(
+            compiled_text,
+            max_tensor_bytes=spec.max_collective_tensor_bytes,
+            max_op_tensor_bytes=caps or None,
+            require=spec.require_collectives)
+    if jaxpr is not None:
+        if spec.forbid_host_callbacks:
+            v += jaxpr_lint.host_callback_eqns(jaxpr)
+        if spec.lut_int_clean:
+            v += [str(u) for u in jaxpr_lint.lut_upcast_violations(jaxpr)]
+        if spec.forbid_logits_output:
+            v += jaxpr_lint.logits_escapes(jaxpr, vocab)
+    stats = hlo_guard.parse_collectives(compiled_text)
+    info = {"donated": sorted(hlo_guard.donated_params(compiled_text)),
+            "collective_tensor_bytes": stats["total"].tensor_bytes,
+            "collective_count": stats["total"].count}
+    return ContractResult(spec=spec, violations=v, info=info)
+
+
+# ---------------------------------------------------------------------------
+# Engine step builders (trace + compile the real jitted entry points)
+# ---------------------------------------------------------------------------
+
+
+def _build_engine(*, pipelined: bool, impl: str, mesh=None, kvh=None):
+    from repro.configs import ARCHS, RunConfig
+    from repro.core.policies import SoftmaxPolicy
+    from repro.models import build_model
+    from repro.runtime import (EngineConfig, PagedCacheConfig,
+                               PipelinedEngine, ServingEngine)
+    arch = ARCHS["qwen3-32b"].scaled_down(
+        d_model=_D_MODEL, n_heads=_HEADS, vocab=_VOCAB, n_periods=_PERIODS,
+        **({} if kvh is None else {"n_kv_heads": kvh}))
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    pol = (SoftmaxPolicy(impl=impl, precision="uint8")
+           if impl != "exact" else SoftmaxPolicy())
+    run = RunConfig(dtype="float32", attention_backend="naive",
+                    scan_layers=True, softmax_policy=pol)
+    cfg = EngineConfig(n_slots=_N_SLOTS, cache=PagedCacheConfig(**_CACHE),
+                       mesh=mesh)
+    cls = PipelinedEngine if pipelined else ServingEngine
+    return arch, cls(model, params, run, cfg)
+
+
+def _pool_leaves(eng) -> int:
+    return len(jax.tree_util.tree_leaves(eng.pools))
+
+
+def _decode_args(eng):
+    from repro.runtime.paged_cache import decode_view, view_arrays
+    view = view_arrays(decode_view({}, eng.n_slots, eng.cache), eng.mesh)
+    return (eng.params, view.tokens, eng.pools, view.block_tables,
+            view.lengths)
+
+
+def _chunk_args(eng):
+    from repro.runtime.paged_cache import PrefillChunkView, view_arrays
+    c, mp = eng.prefill_chunk, eng.cache.max_pages_per_seq
+    view = view_arrays(PrefillChunkView(
+        tokens=np.zeros((1, c), np.int32),
+        block_tables=np.zeros((1, mp), np.int32),
+        cache_lens=np.zeros((1,), np.int32),
+        chunk_lens=np.ones((1,), np.int32)), eng.mesh)
+    return (eng.params, view.tokens, eng.pools, view.block_tables,
+            view.cache_lens, view.chunk_lens)
+
+
+def _artifacts(eng, fn, args, static_argnums=()):
+    """(closed jaxpr, compiled-HLO text) of one jitted engine step."""
+    with eng._mesh_ctx():
+        jaxpr = jax.make_jaxpr(fn, static_argnums=static_argnums)(*args)
+        compiled = fn.lower(*args).compile()
+    return jaxpr, compiled.as_text()
+
+
+def _step_artifacts(eng, step: str):
+    """Dispatch to the engine's real jitted function for ``step``."""
+    if step == "decode":
+        return _artifacts(eng, eng._decode_fn, _decode_args(eng))
+    if step == "prefill-chunk":
+        return _artifacts(eng, eng._chunk_fn, _chunk_args(eng))
+    if step == "cow-copy":
+        args = (eng.pools, *_copy_ids(eng))
+        return _artifacts(eng, eng._copy_fn, args)
+    if step == "decode-sampled":
+        p, tok, pools, bt, ln = _decode_args(eng)
+        s, pos, t = eng._zero_meta_decode
+        args = (p, eng._token_buf, pools, bt, ln, s, pos, t, True)
+        return _artifacts(eng, eng._decode_sampled_fn, args,
+                          static_argnums=(8,))
+    if step == "final-chunk-sampled":
+        args = (*_chunk_args(eng), *eng._zero_meta_chunk, True)
+        return _artifacts(eng, eng._chunk_sampled_fn, args,
+                          static_argnums=(9,))
+    raise ValueError(f"unknown contract step {step!r}")
+
+
+def _copy_ids(eng):
+    import jax.numpy as jnp
+    if eng.mesh is None:
+        return jnp.int32(0), jnp.int32(1)
+    from repro.runtime import partitioning as PT
+    rep = PT.replicated_sharding(eng.mesh)
+    return (jax.device_put(np.int32(0), rep),
+            jax.device_put(np.int32(1), rep))
+
+
+# ---------------------------------------------------------------------------
+# The contract suite
+# ---------------------------------------------------------------------------
+
+
+def _tp_budgets(arch, eng, kvh: int) -> dict:
+    """PR 5's decode budgets: never KV-sized, only (B, H, 1) partials."""
+    d = arch.resolved_head_dim
+    pool_bytes = (_CACHE["n_pages"] * _CACHE["page_size"] * kvh * d * 4)
+    b, h = eng.n_slots, arch.n_heads
+    partial_budget = 2 * b * h * (d + 2) * 4
+    # the COW copy may move at most the one duplicated page per pool
+    # leaf (the 'pages' regime psums it across slabs; 'heads' is local)
+    page_bytes = _PERIODS * _CACHE["page_size"] * kvh * d * 4
+    return {"pool_bytes": pool_bytes, "partial_budget": partial_budget,
+            # strict `< pool_bytes // 4` in the original test
+            "ag_cap": pool_bytes // 4 - 1,
+            "cow_budget": _pool_leaves(eng) * page_bytes}
+
+
+def single_device_contracts() -> list[ContractResult]:
+    """Contracts checkable on one CPU device."""
+    out: list[ContractResult] = []
+    _, eng = _build_engine(pipelined=False, impl="rexp")
+    donated = _pool_leaves(eng)
+    for step in ("decode", "prefill-chunk"):
+        spec = ContractSpec(
+            name=f"single/{step}/rexp", topology="single", step=step,
+            policy="rexp", min_donated=donated, lut_int_clean=True,
+            max_collective_tensor_bytes=0,
+            notes="pool donated; integer-Σ REXP datapath never upcast; "
+                  "no collectives on a single device")
+        out.append(check_artifacts(spec, *_step_artifacts(eng, step)))
+    spec = ContractSpec(
+        name="single/cow-copy", topology="single", step="cow-copy",
+        policy="rexp", min_donated=donated, max_collective_tensor_bytes=0,
+        notes="COW page duplicate runs in-place on the donated pool")
+    out.append(check_artifacts(spec, *_step_artifacts(eng, "cow-copy")))
+
+    _, pipe = _build_engine(pipelined=True, impl="lut2d")
+    donated = _pool_leaves(pipe)
+    for step in ("decode-sampled", "final-chunk-sampled"):
+        spec = ContractSpec(
+            name=f"single/{step}/lut2d", topology="single", step=step,
+            policy="lut2d", min_donated=donated, lut_int_clean=True,
+            forbid_logits_output=True, max_collective_tensor_bytes=0,
+            notes="fused sampling: token vectors out, never (…, V) logits "
+                  "(PR 7 hot-path gate, static form)")
+        out.append(check_artifacts(spec, *_step_artifacts(pipe, step)))
+    return out
+
+
+def tp_contracts() -> list[ContractResult]:
+    """Contracts for the 4-way mesh, both sharded regimes.
+
+    Requires >= 4 visible devices
+    (``--xla_force_host_platform_device_count=4`` on CPU).
+    """
+    from repro.launch.mesh import make_serving_mesh
+    if len(jax.devices()) < 4:
+        raise RuntimeError(
+            f"TP contracts need >= 4 devices, have {len(jax.devices())}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    mesh = make_serving_mesh(4)
+    out: list[ContractResult] = []
+    for kvh, regime in ((4, "heads"), (1, "pages")):
+        topo = f"tp-{regime}"
+        require = ("all-reduce",) if regime == "pages" else ()
+        arch, eng = _build_engine(pipelined=False, impl="rexp",
+                                  mesh=mesh, kvh=kvh)
+        budget = _tp_budgets(arch, eng, kvh)
+        donated = _pool_leaves(eng)
+        spec = ContractSpec(
+            name=f"{topo}/decode/rexp", topology=topo, step="decode",
+            policy="rexp", min_donated=donated, lut_int_clean=True,
+            max_collective_tensor_bytes=budget["partial_budget"],
+            max_op_tensor_bytes=(("all-gather", budget["ag_cap"]),),
+            require_collectives=require,
+            notes="PR 5 gate: decode exchanges only (B, H, 1) partials, "
+                  "never gathered KV")
+        out.append(check_artifacts(spec, *_step_artifacts(eng, "decode")))
+        spec = ContractSpec(
+            name=f"{topo}/prefill-chunk/rexp", topology=topo,
+            step="prefill-chunk", policy="rexp", min_donated=donated,
+            lut_int_clean=True,
+            max_op_tensor_bytes=(("all-gather", budget["ag_cap"]),),
+            notes="prefill chunks may reduce activations but never gather "
+                  "the KV pool")
+        out.append(check_artifacts(spec,
+                                   *_step_artifacts(eng, "prefill-chunk")))
+        spec = ContractSpec(
+            name=f"{topo}/cow-copy", topology=topo, step="cow-copy",
+            policy="rexp", min_donated=donated,
+            max_collective_tensor_bytes=(
+                budget["cow_budget"] if regime == "pages" else 0),
+            max_op_tensor_bytes=(("all-gather", budget["ag_cap"]),),
+            notes="COW copy moves at most the duplicated page: local in "
+                  "'heads', a page-sized psum across slabs in 'pages' — "
+                  "never the pool")
+        out.append(check_artifacts(spec, *_step_artifacts(eng, "cow-copy")))
+
+        arch, pipe = _build_engine(pipelined=True, impl="rexp",
+                                   mesh=mesh, kvh=kvh)
+        budget = _tp_budgets(arch, pipe, kvh)
+        spec = ContractSpec(
+            name=f"{topo}/decode-sampled/rexp", topology=topo,
+            step="decode-sampled", policy="rexp",
+            min_donated=_pool_leaves(pipe), lut_int_clean=True,
+            forbid_logits_output=True,
+            max_op_tensor_bytes=(("all-gather", budget["ag_cap"]),),
+            require_collectives=require,
+            notes="fused sampling on the mesh: no KV-sized all-gather, "
+                  "token vectors out")
+        out.append(check_artifacts(
+            spec, *_step_artifacts(pipe, "decode-sampled")))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Report + ratchet
+# ---------------------------------------------------------------------------
+
+
+def build_report(results: list[ContractResult]) -> dict:
+    return {"version": REPORT_VERSION,
+            "n_contracts": len(results),
+            "n_violations": sum(len(r.violations) for r in results),
+            "contracts": sorted((r.to_dict() for r in results),
+                                key=lambda d: d["name"])}
+
+
+def merge_reports(*reports: dict) -> dict:
+    contracts = [c for r in reports for c in r["contracts"]]
+    return {"version": REPORT_VERSION,
+            "n_contracts": len(contracts),
+            "n_violations": sum(len(c["violations"]) for c in contracts),
+            "contracts": sorted(contracts, key=lambda d: d["name"])}
+
+
+def ratchet_violations(committed: dict, fresh: dict) -> list[str]:
+    """Regressions of ``fresh`` vs the committed report.
+
+    The ratchet compares contract *verdicts*, not byte-level info: a
+    contract may only appear, stay ok, or go from violating to ok —
+    never ok → violation, never grow its violation count, and committed
+    contracts may not silently disappear.
+    """
+    old = {c["name"]: c for c in committed.get("contracts", ())}
+    new = {c["name"]: c for c in fresh.get("contracts", ())}
+    problems: list[str] = []
+    for name, c_old in old.items():
+        c_new = new.get(name)
+        if c_new is None:
+            problems.append(f"ratchet: contract {name!r} disappeared "
+                            f"(was {c_old['status']})")
+            continue
+        n_old, n_new = len(c_old["violations"]), len(c_new["violations"])
+        if n_new > n_old:
+            problems.append(
+                f"ratchet: {name} regressed {n_old} -> {n_new} "
+                f"violation(s): {c_new['violations']}")
+    return problems
+
+
+def load_report(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def dump_report(report: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")

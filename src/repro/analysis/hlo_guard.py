@@ -1,0 +1,361 @@
+"""HLO-text contract guards: collectives, donation aliasing, host transfers.
+
+Absorbs ``launch/hlo_analysis.py`` (which stays as a thin re-export shim)
+and generalizes it from a roofline helper into composable predicates for
+the compiled-artifact contracts in :mod:`repro.analysis.contracts`:
+
+* **Collective census** — every all-gather / all-reduce / reduce-scatter
+  / all-to-all / collective-permute instruction (sync and async
+  ``-start`` variants) as a :class:`CollectiveOp` record carrying result
+  bytes, replica-group size, the computation it lives in and whether
+  that computation runs inside a while-loop body (loop-resident
+  collectives repeat per trip, so budgets must treat them differently).
+  :func:`parse_collectives` keeps the historical aggregate form with the
+  standard ring-model per-chip wire bytes:
+
+      all-gather(out O, group n):      (n-1)/n · O        sent per chip
+      reduce-scatter(in S, group n):   (n-1)/n · S
+      all-reduce(size S, group n):     2 · (n-1)/n · S    (RS + AG)
+      all-to-all(size S, group n):     (n-1)/n · S
+      collective-permute(size S):      S
+
+  Async ``-start`` ops return a tuple ``(operand, result, …context)``;
+  the census takes member 1 as the transferred buffer (counting the
+  whole tuple would double-charge the operand).  Sync variadic
+  collectives (tuple-shaped all-reduce) sum every member.
+
+* **Donation verification** — :func:`donated_params` parses the
+  ``input_output_alias`` header of compiled HLO (present even on CPU,
+  where donation is a runtime no-op but the compile-time intent is
+  recorded); :func:`aliased_params_stablehlo` reads the
+  ``tf.aliasing_output`` arg attributes of lowered StableHLO.
+
+* **Host-transfer detection** — :func:`host_transfer_ops` flags
+  outfeed/infeed/send/recv and host-callback custom-calls, the HLO-level
+  shadow of the jaxpr-level callback lint.
+
+Predicates return violation-message lists (empty == pass) so contracts
+can aggregate them; ``assert_*`` wrappers raise for direct test use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result types: one or a tuple of `dtype[dims]`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*?\)?)\s+"
+    r"(all-gather(?:-start)?|all-reduce(?:-start)?|reduce-scatter(?:-start)?"
+    r"|all-to-all(?:-start)?|collective-permute(?:-start)?)\(",
+)
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,\s]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+
+# computation header: `%name (params) -> type {` or `ENTRY [%]name ... {`
+_COMP_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\{)")
+_WHILE_RE = re.compile(
+    r"=\s*\(?[^)=]*?\)?\s*while\(.*?"
+    r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+
+_HOST_TRANSFER_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?[^)=]*?\)?\s*"
+    r"(outfeed|infeed|send|send-done|recv|recv-done)\(",
+)
+_HOST_CALLBACK_TARGET_RE = re.compile(
+    r'custom_call_target="[^"]*(callback|py_func|PjRtHost|HostCompute)'
+    r'[^"]*"', re.IGNORECASE)
+
+
+def _tensor_bytes_members(type_str: str) -> list[int]:
+    """Per-member result-tensor bytes of an instruction's type string."""
+    members = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        members.append(n * _DTYPE_BYTES[dtype])
+    return members
+
+
+def _tensor_bytes(type_str: str) -> int:
+    return sum(_tensor_bytes_members(type_str))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        first = m.group(1).strip()
+        return len(first.split(",")) if first else 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # [G,S]<=[N]: G groups of size S (groups along the minor dim)
+        return int(m.group(2))
+    return 1
+
+
+def _wire_bytes(base: str, size: int, n: int) -> float:
+    frac = (n - 1) / n if n > 1 else 0.0
+    if base == "all-reduce":
+        return 2.0 * frac * size
+    if base == "reduce-scatter":
+        # result is the scattered shard; operand = result × n
+        return frac * size * n
+    if base == "collective-permute":
+        return float(size)
+    return frac * size  # all-gather (result = full), all-to-all
+
+
+def _while_computations(hlo_text: str) -> tuple[dict[str, str], set[str]]:
+    """Map each instruction line's computation + the set of computation
+    names (transitively) reachable from a while body/condition."""
+    comp_of_line: dict[int, str] = {}
+    refs: dict[str, set[str]] = {}
+    while_seeds: set[str] = set()
+    current = ""
+    for i, line in enumerate(hlo_text.splitlines()):
+        stripped = line.strip()
+        if stripped.endswith("{") and "=" not in stripped:
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                current = m.group(1)
+                refs.setdefault(current, set())
+        comp_of_line[i] = current
+        if current:
+            refs.setdefault(current, set()).update(_CALLS_RE.findall(line))
+        m = _WHILE_RE.search(line)
+        if m:
+            while_seeds.update(m.groups())
+    # closure: anything a while body calls also runs per trip
+    inside = set(while_seeds)
+    frontier = list(while_seeds)
+    while frontier:
+        c = frontier.pop()
+        for nxt in refs.get(c, ()):
+            if nxt not in inside:
+                inside.add(nxt)
+                frontier.append(nxt)
+    return {str(i): c for i, c in comp_of_line.items()}, inside
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction in the optimized HLO."""
+
+    op: str             # base opcode ('-start' stripped)
+    tensor_bytes: int   # transferred result bytes (see module docstring)
+    wire_bytes: float   # per-chip ring-model bytes on the wire
+    group_size: int
+    computation: str    # HLO computation the instruction lives in
+    in_while: bool      # computation runs inside a while-loop body
+    line: str
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    tensor_bytes: int = 0   # Σ result-tensor bytes
+    wire_bytes: float = 0.0  # per-chip ring-model bytes on the wire
+
+
+def collective_census(hlo_text: str) -> list[CollectiveOp]:
+    """Every collective instruction as a :class:`CollectiveOp` record."""
+    comp_of_line, while_comps = _while_computations(hlo_text)
+    out: list[CollectiveOp] = []
+    for i, line in enumerate(hlo_text.splitlines()):
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        type_str, opname = m.group(1), m.group(2)
+        base = opname.replace("-start", "")
+        members = _tensor_bytes_members(type_str)
+        if opname.endswith("-start") and len(members) >= 2:
+            # async tuple result (operand, result, …): member 1 moves
+            size = members[1]
+        else:
+            size = sum(members)
+        n = _group_size(line)
+        comp = comp_of_line.get(str(i), "")
+        out.append(CollectiveOp(
+            op=base, tensor_bytes=size, wire_bytes=_wire_bytes(base, size, n),
+            group_size=n, computation=comp, in_while=comp in while_comps,
+            line=line.strip()))
+    return out
+
+
+def parse_collectives(hlo_text: str) -> dict[str, CollectiveStats]:
+    """Per-collective-type aggregate stats + 'total' (historical API)."""
+    stats: dict[str, CollectiveStats] = {c: CollectiveStats()
+                                         for c in _COLLECTIVES}
+    for rec in collective_census(hlo_text):
+        st = stats[rec.op]
+        st.count += 1
+        st.tensor_bytes += rec.tensor_bytes
+        st.wire_bytes += rec.wire_bytes
+    total = CollectiveStats(
+        count=sum(s.count for s in stats.values()),
+        tensor_bytes=sum(s.tensor_bytes for s in stats.values()),
+        wire_bytes=sum(s.wire_bytes for s in stats.values()),
+    )
+    stats["total"] = total
+    return stats
+
+
+def collectives_summary(hlo_text: str) -> dict:
+    return {k: dataclasses.asdict(v)
+            for k, v in parse_collectives(hlo_text).items()}
+
+
+# ---------------------------------------------------------------------------
+# Donation / input-output aliasing
+# ---------------------------------------------------------------------------
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{(?:[\d,\s]*)\}:\s*\((\d+),\s*\{[\d,\s]*\}(?:,\s*(?:may|must)-alias)?\)")
+_STABLEHLO_ARG_RE = re.compile(r"%arg(\d+)")
+_STABLEHLO_ALIAS_RE = re.compile(r"tf\.aliasing_output\s*=\s*\d+\s*:\s*i32")
+
+
+def donated_params(compiled_hlo_text: str) -> set[int]:
+    """Flat parameter indices the compiled module aliases to an output.
+
+    Parses the ``input_output_alias={ {out}: (param, {}, may-alias) }``
+    module header; XLA records the donation intent even on backends
+    (CPU) where the runtime copy elision is unimplemented.
+    """
+    start = compiled_hlo_text.find("input_output_alias={")
+    if start < 0:
+        return set()
+    # balanced-brace scan of the header value
+    i = compiled_hlo_text.index("{", start)
+    depth, j = 0, i
+    for j in range(i, len(compiled_hlo_text)):
+        if compiled_hlo_text[j] == "{":
+            depth += 1
+        elif compiled_hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    body = compiled_hlo_text[i:j + 1]
+    return {int(m.group(1)) for m in _ALIAS_ENTRY_RE.finditer(body)}
+
+
+def aliased_params_stablehlo(stablehlo_text: str) -> set[int]:
+    """Flat arg indices carrying ``tf.aliasing_output`` in lowered IR."""
+    out: set[int] = set()
+    last_arg = None
+    events: list[tuple[int, str, int]] = []
+    for m in _STABLEHLO_ARG_RE.finditer(stablehlo_text):
+        events.append((m.start(), "arg", int(m.group(1))))
+    for m in _STABLEHLO_ALIAS_RE.finditer(stablehlo_text):
+        events.append((m.start(), "alias", -1))
+    for _, kind, idx in sorted(events):
+        if kind == "arg":
+            last_arg = idx
+        elif last_arg is not None:
+            out.add(last_arg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device→host transfers
+# ---------------------------------------------------------------------------
+
+
+def host_transfer_ops(hlo_text: str) -> list[str]:
+    """Instruction lines that move data across the host boundary."""
+    hits: list[str] = []
+    for line in hlo_text.splitlines():
+        m = _HOST_TRANSFER_RE.match(line)
+        if m:
+            hits.append(line.strip())
+            continue
+        if "custom-call" in line and _HOST_CALLBACK_TARGET_RE.search(line):
+            hits.append(line.strip())
+    return hits
+
+
+# ---------------------------------------------------------------------------
+# Composable predicates (violation lists; empty == pass)
+# ---------------------------------------------------------------------------
+
+
+def donation_violations(compiled_hlo_text: str, min_donated: int) -> list[str]:
+    got = donated_params(compiled_hlo_text)
+    if len(got) < min_donated:
+        return [f"donation: {len(got)} input(s) aliased to outputs "
+                f"({sorted(got)}), contract requires >= {min_donated}"]
+    return []
+
+
+def host_transfer_violations(hlo_text: str) -> list[str]:
+    return [f"host-transfer: {line}" for line in host_transfer_ops(hlo_text)]
+
+
+def collective_budget_violations(
+    hlo_text: str, *,
+    max_tensor_bytes: int | None = None,
+    max_op_tensor_bytes: dict[str, int] | None = None,
+    require: Iterable[str] = (),
+    forbid_in_while: bool = False,
+) -> list[str]:
+    """Check the collective census against a per-step budget.
+
+    ``max_tensor_bytes`` bounds the summed result bytes of every
+    collective in the module; ``max_op_tensor_bytes`` bounds a single
+    opcode (e.g. ``{'all-gather': pool_bytes // 4}`` — the no-KV-sized-
+    all-gather gate); ``require`` names opcodes that must appear (the
+    'pages' regime must psum); ``forbid_in_while`` rejects collectives
+    in while bodies (they repeat per trip and escape one-shot budgets).
+    """
+    census = collective_census(hlo_text)
+    stats = parse_collectives(hlo_text)
+    out: list[str] = []
+    if max_tensor_bytes is not None:
+        total = stats["total"].tensor_bytes
+        if total > max_tensor_bytes:
+            out.append(f"collectives: move {total} B total, budget is "
+                       f"{max_tensor_bytes} B")
+    for op, cap in (max_op_tensor_bytes or {}).items():
+        got = stats[op].tensor_bytes
+        if got > cap:
+            out.append(f"collectives: {op} moves {got} B, cap is {cap} B")
+    for op in require:
+        if stats[op].count == 0:
+            out.append(f"collectives: required {op} never appears")
+    if forbid_in_while:
+        for rec in census:
+            if rec.in_while:
+                out.append(f"collectives: {rec.op} inside while body "
+                           f"{rec.computation!r}")
+    return out
+
+
+def assert_no_host_transfers(hlo_text: str) -> None:
+    v = host_transfer_violations(hlo_text)
+    assert not v, "\n".join(v)
+
+
+def assert_donated(compiled_hlo_text: str, min_donated: int) -> None:
+    v = donation_violations(compiled_hlo_text, min_donated)
+    assert not v, "\n".join(v)
+
+
+def assert_collective_budget(hlo_text: str, **kwargs) -> None:
+    v = collective_budget_violations(hlo_text, **kwargs)
+    assert not v, "\n".join(v)

@@ -50,6 +50,10 @@ import jax.numpy as jnp
 
 from repro.core.lut_builder import Lut2DTables, RexpTables
 from repro.core.policies import SoftmaxPolicy
+# trace-time LUT-datapath tags (kernels/common.py is the canonical home:
+# the Pallas kernels and this reference wear the same markers, so
+# repro.analysis.jaxpr_lint audits both identically)
+from repro.kernels.common import dequant_scope, lut_int_scope
 
 Array = jax.Array
 
@@ -89,11 +93,13 @@ def lut_lookup(lut: Array, idx: Array, impl: str = "gather") -> Array:
     attention matmuls it sits between.
     """
     if impl == "gather":
-        return jnp.take(lut, idx, axis=0)
+        with lut_int_scope():
+            return jnp.take(lut, idx, axis=0)
     if impl == "onehot":
-        oh = jax.nn.one_hot(idx, lut.shape[0], dtype=jnp.float32)
-        out = oh @ lut.astype(jnp.float32)
-        return out.astype(lut.dtype)
+        with lut_int_scope():
+            oh = jax.nn.one_hot(idx, lut.shape[0], dtype=jnp.float32)
+            out = oh @ lut.astype(jnp.float32)
+            return out.astype(lut.dtype)
     raise ValueError(f"unknown lookup impl {impl!r}")
 
 
@@ -140,7 +146,9 @@ def rexp_alpha_index(s_int: Array, tables: RexpTables,
     """α-table index: ``clamp(bin(S / qmax), 0, x_s)`` (Algorithm 1 line 9)."""
     qmax = tables.precision.qmax
     n_alpha = tables.lut_alpha.shape[0]
-    j = _bin_index(s_int.astype(jnp.float32) * inv_scale(qmax), index_mode)
+    with dequant_scope():  # α addressing by S/qmax, not a value escape
+        s_f32 = s_int.astype(jnp.float32)
+    j = _bin_index(s_f32 * inv_scale(qmax), index_mode)
     return jnp.clip(j, 0, n_alpha - 1)
 
 
@@ -157,7 +165,8 @@ def softmax_rexp(
 
     e_int = rexp_exp_int(x, tables, axis, index_mode, lookup_impl)
     # f32 accumulate — exact below 2^24; saturation region starts far lower.
-    s = jnp.sum(e_int.astype(jnp.float32), axis=axis, keepdims=True)
+    with dequant_scope():  # the integer-exact Σ accumulator
+        s = jnp.sum(e_int.astype(jnp.float32), axis=axis, keepdims=True)
     idx_a = rexp_alpha_index(s, tables, index_mode)
     alpha_int = lut_lookup(lut_alpha, idx_a, lookup_impl)
 
@@ -166,7 +175,9 @@ def softmax_rexp(
     # literal shift is below the method's bin error (tests compare both).
     prod = e_int * alpha_int  # int32; ≤ qmax² < 2^30
     inv = inv_scale(qmax)
-    sigma_int = jnp.round(prod.astype(jnp.float32) * inv)
+    with dequant_scope():  # e·α requantizes by 1/qmax: the sanctioned exit
+        prod_f32 = prod.astype(jnp.float32)
+    sigma_int = jnp.round(prod_f32 * inv)
     return sigma_int * inv
 
 
@@ -207,13 +218,15 @@ def softmax_lut2d(
     n_rows, n_cols = lut_sigma.shape
 
     e_int = lut2d_exp_int(x, tables, axis, index_mode, lookup_impl)
-    s = jnp.sum(e_int.astype(jnp.float32), axis=axis, keepdims=True)
+    with dequant_scope():  # the integer-exact Σ accumulator
+        s = jnp.sum(e_int.astype(jnp.float32), axis=axis, keepdims=True)
 
     # Row (numerator) index: MSBs of e w.r.t. scale_ex. floor-style per the
     # MSB wiring; "round" mode centers the bin.
+    with dequant_scope():  # σ-table addressing, not a value escape
+        e_f32 = e_int.astype(jnp.float32)
     i_idx = jnp.clip(
-        _bin_index(e_int.astype(jnp.float32)
-                   * inv_scale(qmax * tables.scale_ex), index_mode),
+        _bin_index(e_f32 * inv_scale(qmax * tables.scale_ex), index_mode),
         0, n_rows - 1,
     )
     # Column (denominator) index: j = bin(S_real / scale_Σ) ∈ [1, n_cols],
@@ -224,7 +237,9 @@ def softmax_lut2d(
     flat = lut_sigma.reshape(-1)
     lin = i_idx * n_cols + jnp.broadcast_to(j_idx, i_idx.shape)
     sigma_int = lut_lookup(flat, lin, "gather")
-    return sigma_int.astype(jnp.float32) * inv_scale(qmax)
+    with dequant_scope():  # σ_int / qmax: the sanctioned exit
+        sigma_f32 = sigma_int.astype(jnp.float32)
+    return sigma_f32 * inv_scale(qmax)
 
 
 # ---------------------------------------------------------------------------
@@ -241,7 +256,9 @@ def softmax_rexp_unnorm(x: Array, tables: RexpTables, axis: int = -1,
     """
     qmax = tables.precision.qmax
     e_int = rexp_exp_int(x, tables, axis, index_mode)
-    return e_int.astype(jnp.float32) / qmax
+    with dequant_scope():  # e/qmax IS this baseline's (un-normalized) output
+        e_f32 = e_int.astype(jnp.float32)
+    return e_f32 / qmax
 
 
 def softmax_log_prior(x: Array, w: int, axis: int = -1,

@@ -28,6 +28,25 @@ Array = jax.Array
 
 NEG_INF = float("-inf")
 
+#: Trace-time tags for the paper's integer-Σ LUT datapath.  ``jax.named_scope``
+#: pushes these onto every equation's ``source_info.name_stack`` at zero
+#: runtime cost; :mod:`repro.analysis.jaxpr_lint` treats integer outputs of
+#: LUT_INT_TAG-scoped equations as taint roots and only accepts int→float
+#: ``convert_element_type`` on tainted values inside a LUT_DEQUANT_TAG scope —
+#: so any *new* silent upcast of the integer pipeline fails the contracts.
+LUT_INT_TAG = "lut_int_sigma"
+LUT_DEQUANT_TAG = "lut_dequant"
+
+
+def lut_int_scope():
+    """Scope whose integer results are LUT-datapath taint roots."""
+    return jax.named_scope(LUT_INT_TAG)
+
+
+def dequant_scope():
+    """Scope sanctioning an intentional int→float dequant/accumulate."""
+    return jax.named_scope(LUT_DEQUANT_TAG)
+
 #: conservative per-core VMEM working-set budget (bytes) used to pick block
 #: shapes; TPU v5e has ~128 MiB VMEM but we budget well under it so double
 #: buffering and spills have room.
@@ -62,10 +81,11 @@ def select_lookup(lut: Array, idx: Array) -> Array:
     int32 array of clamped indices.  Emits ``len(lut)`` vector selects.
     """
     n = lut.shape[0]
-    acc = jnp.zeros(idx.shape, dtype=jnp.int32)
-    for l in range(n):
-        acc = jnp.where(idx == l, lut[l], acc)
-    return acc
+    with lut_int_scope():
+        acc = jnp.zeros(idx.shape, dtype=jnp.int32)
+        for l in range(n):
+            acc = jnp.where(idx == l, lut[l], acc)
+        return acc
 
 
 def kernel_lookup(lut: Array, idx: Array, impl: str) -> Array:
@@ -73,7 +93,8 @@ def kernel_lookup(lut: Array, idx: Array, impl: str) -> Array:
     if impl == "select":
         return select_lookup(lut, idx)
     if impl == "gather":
-        return jnp.take(lut, idx, axis=0)
+        with lut_int_scope():
+            return jnp.take(lut, idx, axis=0)
     raise ValueError(f"unknown in-kernel lookup impl {impl!r}")
 
 
@@ -143,7 +164,9 @@ def rexp_sigma(e_int: Array, s_row: Array, lut_alpha: Array, qmax: int,
     rnd = jnp.round if index_mode == "round" else jnp.floor
     ja = jnp.clip(rnd(s_row * inv).astype(jnp.int32), 0, n_a - 1)
     alpha = kernel_lookup(lut_alpha, ja, lookup)  # (R,)
-    return jnp.round((e_int * alpha[:, None]).astype(jnp.float32) * inv)
+    with dequant_scope():  # e·α requantizes by 1/qmax: the sanctioned exit
+        prod = (e_int * alpha[:, None]).astype(jnp.float32)
+    return jnp.round(prod * inv)
 
 
 def lut2d_sigma_int(e_int: Array, s_row: Array, lut_sigma: Array, qmax: int,
@@ -158,19 +181,22 @@ def lut2d_sigma_int(e_int: Array, s_row: Array, lut_sigma: Array, qmax: int,
     from repro.core.lut_softmax import inv_scale
     n_rows, n_cols = lut_sigma.shape
     rnd = jnp.round if index_mode == "round" else jnp.floor
-    i_idx = jnp.clip(rnd(e_int.astype(jnp.float32)
-                         * inv_scale(qmax * scale_ex)).astype(jnp.int32),
-                     0, n_rows - 1)
+    with dequant_scope():  # MSB addressing, not a value escape
+        e_f32 = e_int.astype(jnp.float32)
+    i_idx = jnp.clip(rnd(e_f32 * inv_scale(qmax * scale_ex))
+                     .astype(jnp.int32), 0, n_rows - 1)
     j_idx = jnp.clip(rnd(s_row * inv_scale(qmax * scale_sum))
                      .astype(jnp.int32), 1, n_cols) - 1  # (R,)
-    sel_col = jnp.zeros((e_int.shape[0], n_rows), dtype=jnp.int32)
-    for j in range(n_cols):
-        sel_col = jnp.where(j_idx[:, None] == j, lut_sigma[:, j][None, :],
-                            sel_col)
-    sigma_int = jnp.zeros(e_int.shape, dtype=jnp.int32)
-    for i in range(n_rows):
-        sigma_int = jnp.where(i_idx == i, sel_col[:, i][:, None], sigma_int)
-    return sigma_int
+    with lut_int_scope():
+        sel_col = jnp.zeros((e_int.shape[0], n_rows), dtype=jnp.int32)
+        for j in range(n_cols):
+            sel_col = jnp.where(j_idx[:, None] == j, lut_sigma[:, j][None, :],
+                                sel_col)
+        sigma_int = jnp.zeros(e_int.shape, dtype=jnp.int32)
+        for i in range(n_rows):
+            sigma_int = jnp.where(i_idx == i, sel_col[:, i][:, None],
+                                  sigma_int)
+        return sigma_int
 
 
 def pick_block_rows(n_cols: int, target_bytes: int = 4 * 1024 * 1024,

@@ -59,6 +59,7 @@ from repro.core import lut_builder
 from repro.core.lut_softmax import inv_scale
 from repro.core.policies import SoftmaxPolicy
 from repro.core import lut_softmax as _core
+from repro.kernels.common import dequant_scope, kernel_lookup
 from repro.kernels.lut_attention import ref as _ref
 from repro.kernels.lut_attention.lut_attention import lut_attention_pallas
 from repro.kernels.lut_attention.paged_decode import paged_decode_attention
@@ -216,7 +217,7 @@ def lut_attention_blocked(
             dd = jnp.where(finite, (m_safe[..., None] - s) * inv_scale(e_step),
                            float(n_lut - 1))
             idx = jnp.clip(rnd(dd).astype(jnp.int32), 0, n_lut - 1)
-            return jnp.where(finite, jnp.take(lut_main, idx, axis=0), 0)
+            return jnp.where(finite, kernel_lookup(lut_main, idx, "gather"), 0)
 
         def one_q_chunk(qi):
             qc = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
@@ -241,7 +242,8 @@ def lut_attention_blocked(
                 mask = _chunk_mask(qi * bq, ki * bk, bq, bk, causal,
                                    lq_orig, lk_eff, q_start)
                 s = jnp.where(mask, s, -jnp.inf)
-                e = e_int_of(s, m_safe).astype(jnp.float32)
+                with dequant_scope():  # f32-exact integer Σ accumulator
+                    e = e_int_of(s, m_safe).astype(jnp.float32)
                 ssum = ssum + jnp.sum(e, axis=-1)
                 u = u + jnp.einsum("bngqk,bnkd->bngqd", e,
                                    vc.astype(jnp.float32))
@@ -258,7 +260,9 @@ def lut_attention_blocked(
                 lut_a = jnp.asarray(tables.lut_alpha, jnp.int32)
                 ja = jnp.clip(rnd(ssum * inv).astype(jnp.int32), 0,
                               lut_a.shape[0] - 1)
-                alpha = jnp.take(lut_a, ja, axis=0).astype(jnp.float32)
+                with dequant_scope():  # α/qmax² fused requant exit
+                    alpha = kernel_lookup(lut_a, ja, "gather") \
+                        .astype(jnp.float32)
                 return u * (alpha * inv * inv)[..., None]
             # lut2d fused form: scale U by LUT_σ row value of the mean bin —
             # the faithful per-element σ is only available in naive/pallas

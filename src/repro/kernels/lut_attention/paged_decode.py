@@ -54,8 +54,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.lut_builder import Lut2DTables, RexpTables
 from repro.core.lut_softmax import inv_scale
-from repro.kernels.common import (NEG_INF, lut2d_sigma_int, policy_e_terms,
-                                  policy_kernel_tables, rexp_sigma)
+from repro.kernels.common import (NEG_INF, dequant_scope, lut2d_sigma_int,
+                                  policy_e_terms, policy_kernel_tables,
+                                  rexp_sigma)
 
 Array = jax.Array
 
@@ -113,7 +114,8 @@ def _pg_sum_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, lut_ref, s_ref, *,
     m = jnp.where(jnp.isfinite(m), m, 0.0)
     e = policy_e_terms(s, m, lut_ref[0, :], method, exp_step, index_mode,
                        lookup)
-    s_ref[0, 0] += jnp.sum(e.astype(jnp.float32), axis=-1)
+    with dequant_scope():  # f32-exact integer Σ accumulator
+        s_ref[0, 0] += jnp.sum(e.astype(jnp.float32), axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -147,7 +149,8 @@ def _pg_weight_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, m_ref, s_ref,
     else:  # lut2d
         sigma_int = lut2d_sigma_int(e, s_tot, lut_aux_ref[...], qmax,
                                     scale_ex, scale_sum, index_mode)
-        w = sigma_int.astype(jnp.float32) * inv_scale(qmax)
+        with dequant_scope():  # σ_int/qmax: the sanctioned exit
+            w = sigma_int.astype(jnp.float32) * inv_scale(qmax)
 
     v = v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dh)
     o_ref[0, 0] += jax.lax.dot_general(

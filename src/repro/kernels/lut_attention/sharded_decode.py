@@ -24,6 +24,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core import lut_builder
+from repro.kernels.common import dequant_scope, kernel_lookup
 from repro.core.lut_softmax import inv_scale
 from repro.core.policies import SoftmaxPolicy
 
@@ -77,8 +78,9 @@ def lut_decode_sharded(
             finite = jnp.isfinite(s)
             dd = jnp.where(finite, m_safe[..., None] - s, float(n - 1))
             bins = jnp.clip(rnd(dd).astype(jnp.int32), 0, n - 1)
-            e = jnp.where(finite, jnp.take(lut_re, bins, axis=0), 0)
-            e = e.astype(jnp.float32)
+            e = jnp.where(finite, kernel_lookup(lut_re, bins, "gather"), 0)
+            with dequant_scope():  # f32-exact integer Σ accumulator
+                e = e.astype(jnp.float32)
             s_loc = jnp.sum(e, axis=-1)
             u_loc = jnp.einsum("bngqk,bnkd->bngqd", e,
                                v_.astype(jnp.float32))
@@ -87,7 +89,8 @@ def lut_decode_sharded(
             inv = inv_scale(qmax)
             ja = jnp.clip(rnd(ssum * inv).astype(jnp.int32), 0,
                           lut_a.shape[0] - 1)
-            alpha = jnp.take(lut_a, ja, axis=0).astype(jnp.float32)
+            with dequant_scope():  # α/qmax² fused requant: the sanctioned exit
+                alpha = kernel_lookup(lut_a, ja, "gather").astype(jnp.float32)
             out = u * (alpha * inv * inv)[..., None]
         return out.reshape(q_.shape[0], h, lq, d)
 

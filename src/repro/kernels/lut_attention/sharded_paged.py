@@ -112,7 +112,7 @@ def _sigma_from_terms(e: Array, s_sum: Array, policy: SoftmaxPolicy,
     summation order); for ``exact`` the psum'd Σ may reassociate,
     leaving σ identical only to ulp level.
     """
-    from repro.kernels.common import lut2d_sigma_int, rexp_sigma
+    from repro.kernels.common import dequant_scope, lut2d_sigma_int, rexp_sigma
     if policy.impl == "exact":
         return e / jnp.maximum(s_sum, jnp.finfo(jnp.float32).tiny)
     _, lut_aux, _, qmax, scale_ex, scale_sum = ktabs
@@ -123,9 +123,10 @@ def _sigma_from_terms(e: Array, s_sum: Array, policy: SoftmaxPolicy,
         sigma_int = rexp_sigma(e2, s_row, lut_aux[0], qmax,
                                policy.index_mode, "gather")
     else:  # lut2d
-        sigma_int = lut2d_sigma_int(e2, s_row, lut_aux, qmax, scale_ex,
-                                    scale_sum,
-                                    policy.index_mode).astype(jnp.float32)
+        with dequant_scope():  # σ_int/qmax: the sanctioned exit
+            sigma_int = lut2d_sigma_int(e2, s_row, lut_aux, qmax, scale_ex,
+                                        scale_sum,
+                                        policy.index_mode).astype(jnp.float32)
     return sigma_int.reshape(e.shape) * inv
 
 
@@ -142,7 +143,7 @@ def _partials_body(policy: SoftmaxPolicy, tables, scale: float, causal: bool,
     positions whose page lives elsewhere are −inf-masked, so each valid
     key is claimed by exactly one device.
     """
-    from repro.kernels.common import policy_kernel_tables
+    from repro.kernels.common import dequant_scope, policy_kernel_tables
     from repro.kernels.lut_attention import ops as _ops
     from repro.kernels.lut_attention import ref as _ref
 
@@ -168,8 +169,9 @@ def _partials_body(policy: SoftmaxPolicy, tables, scale: float, causal: bool,
         s = jnp.where(mask, s, -jnp.inf)
         m = jax.lax.pmax(jnp.max(s, axis=-1, keepdims=True), axis)
         e = _e_terms(s, m, policy, ktabs)
-        s_sum = jax.lax.psum(
-            jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True), axis)
+        with dequant_scope():  # f32-exact integer Σ accumulator
+            local_sum = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        s_sum = jax.lax.psum(local_sum, axis)
         sigma = _sigma_from_terms(e, s_sum, policy, ktabs)
         return jax.lax.psum(_ops._grouped_pv(sigma, v_view), axis)
 

@@ -1,113 +1,17 @@
-"""HLO text analysis: collective bytes for the roofline's third term.
+"""HLO collective-bytes analysis — re-export shim.
 
-``cost_analysis()`` does not expose collective traffic, so we parse the
-optimized HLO: every all-gather / all-reduce / reduce-scatter /
-all-to-all / collective-permute gets its tensor bytes from the result
-type and its group size from ``replica_groups``, and we convert to
-*per-chip wire bytes* with the standard ring formulas:
-
-    all-gather(out O, group n):      (n-1)/n · O        sent per chip
-    reduce-scatter(in S, group n):   (n-1)/n · S
-    all-reduce(size S, group n):     2 · (n-1)/n · S    (RS + AG)
-    all-to-all(size S, group n):     (n-1)/n · S
-    collective-permute(size S):      S
-
-Collectives inside while-loop bodies appear once in the text; the caller
-scales them by trip count via the probe-extrapolation methodology
-(EXPERIMENTS.md §Methodology).
+The parser grew into the static-analysis subsystem at
+:mod:`repro.analysis.hlo_guard` (collective census with async-start and
+inside-while awareness, donation aliasing, host-transfer detection).
+This module keeps the historical import path for the roofline,
+``launch/dryrun.py`` and older tests; new code should import from
+``repro.analysis`` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import re
+from repro.analysis.hlo_guard import (CollectiveStats, collective_census,
+                                      collectives_summary, parse_collectives)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-# result types: one or a tuple of `dtype[dims]`
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_LINE_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*?\)?)\s+"
-    r"(all-gather(?:-start)?|all-reduce(?:-start)?|reduce-scatter"
-    r"|all-to-all|collective-permute(?:-start)?)\(",
-)
-_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,\s]*)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
-
-
-def _tensor_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def _group_size(line: str) -> int:
-    m = _GROUPS_BRACE_RE.search(line)
-    if m:
-        first = m.group(1).strip()
-        return len(first.split(",")) if first else 1
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:
-        # [G,S]<=[N]: G groups of size S (groups along the minor dim)
-        return int(m.group(2))
-    return 1
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    count: int = 0
-    tensor_bytes: int = 0   # Σ result-tensor bytes
-    wire_bytes: float = 0.0  # per-chip ring-model bytes on the wire
-
-
-def parse_collectives(hlo_text: str) -> dict[str, CollectiveStats]:
-    """Per-collective-type stats + 'total'."""
-    stats: dict[str, CollectiveStats] = {c: CollectiveStats()
-                                         for c in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        m = _LINE_RE.match(line)
-        if not m:
-            continue
-        type_str, opname = m.group(1), m.group(2)
-        base = opname.replace("-start", "")
-        size = _tensor_bytes(type_str)
-        n = _group_size(line)
-        st = stats[base]
-        st.count += 1
-        st.tensor_bytes += size
-        frac = (n - 1) / n if n > 1 else 0.0
-        if base == "all-reduce":
-            st.wire_bytes += 2.0 * frac * size
-        elif base == "reduce-scatter":
-            # result is the scattered shard; operand = result × n
-            st.wire_bytes += frac * size * n
-        elif base == "collective-permute":
-            st.wire_bytes += float(size)
-        else:  # all-gather (result = full), all-to-all
-            st.wire_bytes += frac * size
-    total = CollectiveStats(
-        count=sum(s.count for s in stats.values()),
-        tensor_bytes=sum(s.tensor_bytes for s in stats.values()),
-        wire_bytes=sum(s.wire_bytes for s in stats.values()),
-    )
-    stats["total"] = total
-    return stats
-
-
-def collectives_summary(hlo_text: str) -> dict:
-    return {k: dataclasses.asdict(v)
-            for k, v in parse_collectives(hlo_text).items()}
+__all__ = ["CollectiveStats", "collective_census", "collectives_summary",
+           "parse_collectives"]

@@ -328,12 +328,33 @@ class ServingEngine:
             return model.decode_step_paged(params, token, pools,
                                            block_tables, lengths, run)
 
+        from repro.kernels.lut_attention.ops import paged_mesh_regime
+        page_sharded = (paged_mesh_regime(mesh, model.cfg.n_kv_heads)
+                        == "pages")
+
         def copy_page_fn(pools, src, dst):
             # duplicate one physical page across every pool leaf (axis 0
             # is the period stack, axis 1 the page id) — the device half
             # of a copy-on-write: bitwise, so sharing stays invisible
-            return jax.tree_util.tree_map(
-                lambda v: v.at[:, dst].set(v[:, src]), pools)
+            if not page_sharded:
+                # page axis unsharded: a one-page in-place scatter
+                return jax.tree_util.tree_map(
+                    lambda v: v.at[:, dst].set(v[:, src]), pools)
+
+            def dup(v):
+                # page axis sharded: dynamic-slice with a traced page id
+                # would make SPMD all-gather the whole pool (KV-sized —
+                # caught by the tp-pages cow-copy contract).  A one-hot
+                # select reduces over the sharded axis instead, so only
+                # the one selected page is psum'd, then the write back
+                # is element-wise and shard-local.
+                pages = jnp.arange(v.shape[1])
+                sel = pages.reshape((1, -1) + (1,) * (v.ndim - 2))
+                page = jnp.sum(jnp.where(sel == src, v, 0), axis=1,
+                               keepdims=True)
+                return jnp.where(sel == dst, page, v)
+
+            return jax.tree_util.tree_map(dup, pools)
 
         # donate the pools: the old buffers are dead the moment the step
         # returns, so XLA may scatter the new K/V in place (a no-op on
@@ -375,6 +396,7 @@ class ServingEngine:
         rid = self._next_id
         self._next_id += 1
         self._seqs[rid] = self.scheduler.add(Request(
+            # lint: allow-host-sync — caller-provided prompt, host data
             id=rid, prompt=tuple(int(t) for t in np.asarray(prompt)),
             max_new_tokens=max_new_tokens, temperature=temperature,
             seed=seed, eos_id=eos_id))
@@ -500,6 +522,9 @@ class ServingEngine:
         # whole-prompt logits — sample the first token right here
         self.stats.prefills += 1
         self.stats.first_tokens += 1
+        # lint: allow-host-sync — sync engine only: the prompt's first
+        # token is host-sampled from the final chunk's logits; the
+        # pipelined engine replaces this path with on-device sampling
         tok = self._sample(seq, np.asarray(logits[0, 0]))
         # stamp TTFT only now: np.asarray above blocked on the device, so
         # the first token actually exists (async dispatch would otherwise
@@ -517,6 +542,9 @@ class ServingEngine:
             logits, self.pools = self._decode_fn(
                 self.params, view.tokens, self.pools, view.block_tables,
                 view.lengths)
+        # lint: allow-host-sync — sync engine only: ServingEngine samples
+        # on the host each step by design; PipelinedEngine overrides the
+        # whole step loop and never fetches logits (contract-checked)
         logits = np.asarray(logits)  # (n_slots, 1, V)
         # stall metric: completion-to-completion, measured AFTER the sync
         # above — un-synced prefill chunks queue device work that
@@ -589,6 +617,7 @@ class ServingEngine:
         rid = seq.request.id
         res = GenerationResult(
             request_id=rid,
+            # lint: allow-host-sync — host-side token list, no device wait
             tokens=np.asarray(seq.generated, np.int32),
             finish_reason=seq.finish_reason or "length",
             n_evictions=seq.n_evictions,
@@ -732,9 +761,13 @@ class PipelinedEngine(ServingEngine):
         return jax.device_put(a, PT.replicated_sharding(self.mesh))
 
     def _put_sample_meta(self, seeds, positions, temps):
-        return (self._put(np.asarray(seeds, np.int32)),
-                self._put(np.asarray(positions, np.int32)),
-                self._put(np.asarray(temps, np.float32)))
+        # lint: allow-host-sync — host lists H2D, no device wait
+        seeds = np.asarray(seeds, np.int32)
+        # lint: allow-host-sync
+        positions = np.asarray(positions, np.int32)
+        # lint: allow-host-sync
+        temps = np.asarray(temps, np.float32)
+        return self._put(seeds), self._put(positions), self._put(temps)
 
     # -- step loop ---------------------------------------------------------
 
@@ -872,6 +905,11 @@ class PipelinedEngine(ServingEngine):
         """
         rec = self._inflight.popleft()
         t0 = time.time()
+        # lint: allow-host-sync — the pipelined engine's ONE intended
+        # device wait: harvesting a step dispatched `depth` steps ago,
+        # and only the (n,) int32 sampled tokens — never full logits
+        # (the decode-sampled contract pins the shape); D2H was started
+        # early by copy_to_host_async at dispatch
         host = np.asarray(rec.tokens)  # (n,) int32 — never full logits
         now = time.time()
         self.stats.harvest_wait_s += now - t0

@@ -1,0 +1,445 @@
+"""The static-analysis subsystem, tested on itself.
+
+Four layers:
+
+* census / donation / host-transfer predicates on canned + real HLO;
+* the jaxpr LUT-upcast taint walker on synthetic jaxprs with planted
+  violations (including inside scan bodies and nested jits) and on the
+  real tagged softmax implementations;
+* contract specs: round-trip, ratchet semantics, and the single-device
+  contract suite passing on the real engine;
+* the acceptance gates — deliberately breaking an invariant (dropping
+  ``donate_argnums``, returning full logits from the pipelined decode
+  step) must flip the matching contract to a violation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (contracts, hlo_guard, jaxpr_lint,
+                            lut_upcast_violations, trace_step)
+from repro.kernels.common import dequant_scope, kernel_lookup, lut_int_scope
+
+# ---------------------------------------------------------------------------
+# hlo_guard: census on canned HLO
+# ---------------------------------------------------------------------------
+
+_WHILE_HLO = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %ar = f32[8,16] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main {
+  %init = (s32[], f32[8,16]) tuple(%z, %x0)
+  %w = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+  %ag = f32[32,16] all-gather(%p0), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %out = f32[32,16] copy(%ag)
+}
+"""
+
+
+def test_census_in_while_flag():
+    census = hlo_guard.collective_census(_WHILE_HLO)
+    by_op = {c.op: c for c in census}
+    assert by_op["all-reduce"].in_while
+    assert by_op["all-reduce"].computation == "body"
+    assert not by_op["all-gather"].in_while
+    v = hlo_guard.collective_budget_violations(_WHILE_HLO,
+                                               forbid_in_while=True)
+    assert len(v) == 1 and "while" in v[0]
+
+
+def test_census_iota_replica_groups():
+    census = hlo_guard.collective_census(_WHILE_HLO)
+    ag = next(c for c in census if c.op == "all-gather")
+    assert ag.group_size == 4          # [2,4]<=[8]: 2 groups of 4
+    assert ag.tensor_bytes == 32 * 16 * 4
+    assert abs(ag.wire_bytes - (3 / 4) * 32 * 16 * 4) < 1
+
+
+def test_census_async_start_tuple_takes_member_1():
+    txt = ("  %ags = (f32[8,16]{1,0}, f32[32,16]{1,0}) all-gather-start"
+           "(%p0), channel_id=1, replica_groups={{0,1,2,3}}, "
+           "dimensions={0}\n")
+    (rec,) = hlo_guard.collective_census(txt)
+    assert rec.op == "all-gather"
+    assert rec.tensor_bytes == 32 * 16 * 4   # result member, not operand
+
+    # sync variadic tuples still sum every member
+    txt = ("  %ar = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-reduce(%a, %b), "
+           "replica_groups={{0,1}}, to_apply=%add\n")
+    (rec,) = hlo_guard.collective_census(txt)
+    assert rec.tensor_bytes == 2 * 16
+
+
+def test_budget_predicates():
+    assert hlo_guard.collective_budget_violations(
+        _WHILE_HLO, max_tensor_bytes=10 ** 6) == []
+    v = hlo_guard.collective_budget_violations(_WHILE_HLO,
+                                               max_tensor_bytes=10)
+    assert v and "budget" in v[0]
+    v = hlo_guard.collective_budget_violations(
+        _WHILE_HLO, max_op_tensor_bytes={"all-gather": 10})
+    assert v and "all-gather" in v[0]
+    v = hlo_guard.collective_budget_violations(
+        _WHILE_HLO, require=("reduce-scatter",))
+    assert v and "reduce-scatter" in v[0]
+
+
+def test_host_transfer_detection():
+    txt = ('  %of = token[] outfeed(%x, %tok), outfeed_config="x"\n'
+           '  %cc = f32[4]{0} custom-call(%x), '
+           'custom_call_target="xla_python_cpu_callback"\n')
+    hits = hlo_guard.host_transfer_ops(txt)
+    assert len(hits) == 2
+    assert hlo_guard.host_transfer_violations("  %x = f32[4]{0} add(%a)\n") \
+        == []
+
+
+# ---------------------------------------------------------------------------
+# hlo_guard: donation on real compiled modules
+# ---------------------------------------------------------------------------
+
+
+def test_donation_positive_and_negative():
+    def f(a, b):
+        return a + b, b * 2
+
+    x = jnp.ones((8, 8))
+    donating = jax.jit(f, donate_argnums=(0,)).lower(x, x).compile()
+    plain = jax.jit(f).lower(x, x).compile()
+    assert hlo_guard.donated_params(donating.as_text()) == {0}
+    assert hlo_guard.donated_params(plain.as_text()) == set()
+    assert hlo_guard.donation_violations(donating.as_text(), 1) == []
+    v = hlo_guard.donation_violations(plain.as_text(), 1)
+    assert v and "donation" in v[0]
+
+
+def test_donation_stablehlo_aliasing():
+    def f(a, b):
+        return a + b
+
+    x = jnp.ones((4,))
+    ir = jax.jit(f, donate_argnums=(0,)).lower(x, x).as_text()
+    assert hlo_guard.aliased_params_stablehlo(ir) == {0}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr_lint: the LUT taint walker
+# ---------------------------------------------------------------------------
+
+
+def _lut():
+    return jnp.arange(4, dtype=jnp.int32)
+
+
+def test_untagged_upcast_flagged():
+    def bad(a):
+        idx = jnp.clip(a.astype(jnp.int32), 0, 3)
+        e = kernel_lookup(_lut(), idx, "gather")
+        return e.astype(jnp.float32) * 2.0
+
+    v = lut_upcast_violations(trace_step(bad, jnp.zeros((4, 8))))
+    assert len(v) == 1
+    assert v[0].src_dtype == "int32" and v[0].dst_dtype == "float32"
+
+
+def test_dequant_scoped_upcast_clean():
+    def good(a):
+        idx = jnp.clip(a.astype(jnp.int32), 0, 3)
+        e = kernel_lookup(_lut(), idx, "gather")
+        with dequant_scope():
+            return e.astype(jnp.float32) * 2.0
+
+    assert lut_upcast_violations(trace_step(good, jnp.zeros((4, 8)))) == []
+
+
+def test_untainted_converts_ignored():
+    def fine(a):
+        # int→float conversions NOT fed by a LUT read are out of scope
+        return a.astype(jnp.int32).astype(jnp.float32)
+
+    assert lut_upcast_violations(trace_step(fine, jnp.zeros((4, 8)))) == []
+
+
+def test_taint_propagates_through_arithmetic():
+    def bad(a):
+        idx = jnp.clip(a.astype(jnp.int32), 0, 3)
+        e = kernel_lookup(_lut(), idx, "select")
+        acc = e * 2 + 1               # still the integer datapath
+        return acc.astype(jnp.float32)
+
+    assert len(lut_upcast_violations(trace_step(bad, jnp.zeros((4, 8))))) == 1
+
+
+def test_planted_violation_inside_scan_and_nested_jit():
+    def bad_scan(a):
+        def body(c, row):
+            idx = jnp.clip(row.astype(jnp.int32), 0, 3)
+            e = kernel_lookup(_lut(), idx, "gather")
+            return c + jnp.sum(e.astype(jnp.float32)), None
+        c, _ = jax.lax.scan(body, 0.0, a)
+        return c
+
+    v = lut_upcast_violations(trace_step(jax.jit(bad_scan),
+                                         jnp.zeros((4, 8))))
+    assert len(v) >= 1
+
+
+def test_tainted_root_via_scope_tag():
+    def bad(a):
+        with lut_int_scope():          # manual root: integer result
+            s = jnp.sum(a.astype(jnp.int32), axis=-1)
+        return s.astype(jnp.float32)
+
+    assert len(lut_upcast_violations(trace_step(bad, jnp.zeros((4, 8))))) == 1
+
+
+def test_real_softmax_paths_are_clean():
+    from repro.core import lut_builder
+    from repro.core.lut_softmax import softmax_lut2d, softmax_rexp
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)),
+                    jnp.float32)
+    rt = lut_builder.build_rexp_tables("uint8", 16)
+    lt = lut_builder.build_lut2d_tables("uint8")
+    assert lut_upcast_violations(
+        trace_step(lambda a: softmax_rexp(a, rt), x)) == []
+    assert lut_upcast_violations(
+        trace_step(lambda a: softmax_lut2d(a, lt), x)) == []
+
+
+def test_host_callback_flagged():
+    def cb(a):
+        jax.debug.callback(lambda z: None, a)
+        return a * 2
+
+    v = jaxpr_lint.host_callback_eqns(trace_step(jax.jit(cb),
+                                                 jnp.zeros((4,))))
+    assert v and "debug_callback" in v[0]
+    assert jaxpr_lint.host_callback_eqns(
+        trace_step(lambda a: a * 2, jnp.zeros((4,)))) == []
+
+
+def test_logits_escape_flagged():
+    vocab = 32
+    x = jnp.zeros((3, vocab))
+    assert jaxpr_lint.logits_escapes(trace_step(lambda a: a, x), vocab)
+    assert jaxpr_lint.logits_escapes(
+        trace_step(lambda a: jnp.argmax(a, axis=-1), x), vocab) == []
+    # rank-1 (vocab,) vectors are not "logits escaping a batch step"
+    assert jaxpr_lint.logits_escapes(
+        trace_step(lambda a: a[0], x), vocab) == []
+
+
+# ---------------------------------------------------------------------------
+# contracts: spec round-trip + ratchet semantics
+# ---------------------------------------------------------------------------
+
+
+def test_contract_spec_round_trip():
+    spec = contracts.ContractSpec(
+        name="t/decode", topology="tp-pages", step="decode", policy="rexp",
+        min_donated=2, lut_int_clean=True, forbid_logits_output=True,
+        max_collective_tensor_bytes=1024,
+        max_op_tensor_bytes=(("all-gather", 99),),
+        require_collectives=("all-reduce",), notes="x")
+    again = contracts.ContractSpec.from_dict(spec.to_dict())
+    assert again == spec
+
+
+def _report(name, violations):
+    return {"version": 1, "contracts": [
+        {"name": name, "topology": "single", "step": "decode",
+         "status": "ok" if not violations else "violation",
+         "violations": violations, "info": {}}]}
+
+
+def test_ratchet_ok_on_equal_and_improvement():
+    base = _report("c1", ["v1"])
+    assert contracts.ratchet_violations(base, _report("c1", ["v1"])) == []
+    assert contracts.ratchet_violations(base, _report("c1", [])) == []
+
+
+def test_ratchet_rejects_regression_and_disappearance():
+    base = _report("c1", [])
+    v = contracts.ratchet_violations(base, _report("c1", ["new"]))
+    assert v and "regressed" in v[0]
+    v = contracts.ratchet_violations(base, _report("other", []))
+    assert v and "disappeared" in v[0]
+
+
+def test_report_merge_counts():
+    a = contracts.merge_reports(_report("a", []), _report("b", ["x"]))
+    assert a["n_contracts"] == 2 and a["n_violations"] == 1
+    assert [c["name"] for c in a["contracts"]] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# contracts on the real engine (single device) + the acceptance gates
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sync_engine():
+    return contracts._build_engine(pipelined=False, impl="rexp")
+
+
+def test_single_device_contracts_all_pass():
+    results = contracts.single_device_contracts()
+    assert len(results) == 5
+    bad = {r.spec.name: r.violations for r in results if r.violations}
+    assert not bad, bad
+
+
+def test_breaking_donation_fails_contract(sync_engine):
+    """Acceptance: removing donate_argnums must flip the contract."""
+    _, eng = sync_engine
+    spec = contracts.ContractSpec(
+        name="t/decode", topology="single", step="decode", policy="rexp",
+        min_donated=contracts._pool_leaves(eng))
+    ok = contracts.check_artifacts(spec,
+                                   *contracts._step_artifacts(eng, "decode"))
+    assert ok.status == "ok"
+    # same step, donation stripped — the engine wires donate_argnums=(2,)
+    undonated = jax.jit(eng._decode_fn.__wrapped__)
+    broken = contracts.check_artifacts(
+        spec, *contracts._artifacts(eng, undonated,
+                                    contracts._decode_args(eng)))
+    assert broken.status == "violation"
+    assert any("donation" in v for v in broken.violations)
+
+
+def test_full_logits_on_pipelined_fails_contract():
+    """Acceptance: fetching full logits in the pipelined step must flip
+    the no-logits contract (PR 7's gate, static form)."""
+    _, pipe = contracts._build_engine(pipelined=True, impl="rexp")
+    spec = contracts.ContractSpec(
+        name="t/decode-sampled", topology="single", step="decode-sampled",
+        policy="rexp", forbid_logits_output=True)
+    ok = contracts.check_artifacts(
+        spec, *contracts._step_artifacts(pipe, "decode-sampled"))
+    assert ok.status == "ok"
+
+    model, run = pipe.model, pipe.run_cfg
+
+    def leaky(params, tokens, pools, bt, lengths, seeds, pos, temps, greedy):
+        # ships (n_slots, 1, V) logits instead of sampled tokens
+        return model.decode_step_paged(params, tokens[:, None], pools, bt,
+                                       lengths, run)
+
+    pipe._decode_sampled_fn = jax.jit(leaky, donate_argnums=(2,),
+                                      static_argnums=(8,))
+    broken = contracts.check_artifacts(
+        spec, *contracts._step_artifacts(pipe, "decode-sampled"))
+    assert broken.status == "violation"
+    assert any("logits-escape" in v for v in broken.violations)
+
+
+def test_untagged_kernel_upcast_fails_contract(sync_engine):
+    """A new silent upcast of the integer datapath inside the traced
+    step flips lut_int_clean — the tag convention is load-bearing."""
+    _, eng = sync_engine
+    jaxpr, text = contracts._step_artifacts(eng, "decode")
+    spec = contracts.ContractSpec(
+        name="t/decode", topology="single", step="decode", policy="rexp",
+        lut_int_clean=True)
+    assert contracts.check_artifacts(spec, jaxpr, text).status == "ok"
+
+    def planted(params, token, pools, bt, lengths):
+        logits, pools = eng._decode_fn.__wrapped__(params, token, pools,
+                                                   bt, lengths)
+        idx = jnp.clip(token.astype(jnp.int32), 0, 3)
+        leak = kernel_lookup(_lut(), idx, "gather").astype(jnp.float32)
+        return logits + jnp.mean(leak), pools
+
+    bad_jaxpr = jax.make_jaxpr(planted)(*contracts._decode_args(eng))
+    bad = contracts.check_artifacts(spec, bad_jaxpr, text)
+    assert bad.status == "violation"
+    assert any("lut-upcast" in v for v in bad.violations)
+
+
+# ---------------------------------------------------------------------------
+# compile-count helper (the one-compile pins' shared API)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_count_helper():
+    from repro.analysis import assert_compile_count, compile_count
+
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    assert compile_count(f) == 0
+    f(jnp.zeros((2,)))
+    f(jnp.zeros((2,)))                 # cache hit
+    assert compile_count(f) == 1
+    assert_compile_count(f, 1)
+    f(jnp.zeros((3,)))                 # new shape → recompile
+    with pytest.raises(AssertionError, match="expected exactly 1"):
+        assert_compile_count(f, 1)
+
+
+# ---------------------------------------------------------------------------
+# tools/lint_repro.py (imported by path: tools/ is not a package)
+# ---------------------------------------------------------------------------
+
+
+def _lint(tmp_path, rel, code):
+    import importlib.util
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    spec = importlib.util.spec_from_file_location(
+        "lint_repro", root / "tools" / "lint_repro.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(code)
+    mod.REPO = tmp_path
+    return mod.lint_file(p)
+
+
+def test_lint_host_sync_rule(tmp_path):
+    bad = "import numpy as np\ndef f(x):\n    return np.asarray(x)\n"
+    v = _lint(tmp_path, "src/repro/runtime/m.py", bad)
+    assert len(v) == 1 and "R1" in v[0]
+    good = ("import numpy as np\ndef f(x):\n"
+            "    # lint: allow-host-sync — test\n    return np.asarray(x)\n")
+    assert _lint(tmp_path, "src/repro/runtime/m.py", good) == []
+    # outside runtime/: no rule
+    assert _lint(tmp_path, "src/repro/core/m.py", bad) == []
+
+
+def test_lint_jnp_free_and_config_and_defaults(tmp_path):
+    v = _lint(tmp_path, "src/repro/runtime/scheduler.py",
+              "import jax.numpy as jnp\ndef f():\n    return jnp.zeros(3)\n")
+    assert sum("R2" in x for x in v) == 2      # import + use
+    v = _lint(tmp_path, "src/repro/m.py",
+              "import dataclasses\n@dataclasses.dataclass\n"
+              "class FooConfig:\n    x: int = 0\n")
+    assert len(v) == 1 and "R3" in v[0]
+    assert _lint(tmp_path, "src/repro/m.py",
+                 "import dataclasses\n"
+                 "@dataclasses.dataclass(frozen=True)\n"
+                 "class FooConfig:\n    x: int = 0\n") == []
+    v = _lint(tmp_path, "src/repro/m.py", "def f(x, y=[]):\n    return y\n")
+    assert len(v) == 1 and "R4" in v[0]

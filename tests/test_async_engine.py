@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import assert_compile_count
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
@@ -193,6 +194,27 @@ def test_pipelined_never_ships_full_logits(small_lm):
             f"{kind} step fetched {shape}, not a token vector"
 
 
+def test_pipelined_steps_pass_no_logits_contract(small_lm):
+    """Static companion to the spy test above: hold the traced jaxprs of
+    both fused-sampling steps to the analyzer's logits-escape lint — no
+    ``(…, V)``-shaped output may leave the jitted program at all, so the
+    invariant binds at trace time, not just on the paths a run happens
+    to exercise."""
+    from repro.analysis import contracts
+    model, params = small_lm
+    eng = PipelinedEngine(model, params, _run_cfg("exact"),
+                          EngineConfig(n_slots=3, cache=CACHE))
+    for step in ("decode-sampled", "final-chunk-sampled"):
+        spec = contracts.ContractSpec(
+            name=f"async/{step}", topology="single", step=step,
+            policy="exact", forbid_logits_output=True,
+            min_donated=contracts._pool_leaves(eng))
+        res = contracts.check_artifacts(
+            spec, *contracts._step_artifacts(eng, step),
+            vocab=model.cfg.vocab_size)
+        assert res.status == "ok", (step, res.violations)
+
+
 def test_sample_tokens_bitwise_matches_host_sample(small_lm):
     """The fused device sampler and the sync engine's host-side
     ``_sample`` draw from the same (seed, position) key stream: same
@@ -306,8 +328,8 @@ def test_pipelined_no_rejit_across_steps(small_lm):
                           EngineConfig(n_slots=2, cache=CACHE))
     rng = np.random.default_rng(9)
     eng.run(_mixed_requests(rng, n=4, temperatures=(0.0,)))
-    assert eng._decode_sampled_fn._cache_size() == 1
-    assert eng._chunk_sampled_fn._cache_size() == 1
+    assert_compile_count(eng._decode_sampled_fn, 1, "greedy decode")
+    assert_compile_count(eng._chunk_sampled_fn, 1, "greedy chunk")
     eng.run(_mixed_requests(rng, n=4, temperatures=(0.7,)))
-    assert eng._decode_sampled_fn._cache_size() == 2
-    assert eng._chunk_sampled_fn._cache_size() == 2
+    assert_compile_count(eng._decode_sampled_fn, 2, "sampled decode")
+    assert_compile_count(eng._chunk_sampled_fn, 2, "sampled chunk")

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import assert_compile_count
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.kernels.lut_attention.ops import (lut_attention,
@@ -198,9 +199,8 @@ def test_engine_one_prefill_compile_serves_all_lengths(small_lm):
                         EngineConfig(n_slots=3, cache=CACHE,
                                      prefill_chunk=CHUNK))
     eng.run([(rng.integers(0, 128, size=pl).tolist(), 2) for pl in plens])
-    traces = eng._chunk_fn._cache_size()
-    assert traces == 1, f"prefill retraced {traces} times for {plens}"
-    assert eng._decode_fn._cache_size() == 1
+    assert_compile_count(eng._chunk_fn, 1, f"prefill chunk over {plens}")
+    assert_compile_count(eng._decode_fn, 1, "decode")
 
 
 def test_engine_prefill_interleaves_with_decode(small_lm):

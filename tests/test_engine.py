@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import assert_compile_count
 from repro.configs import ARCHS, RunConfig
 from repro.core.policies import SoftmaxPolicy
 from repro.models import build_model
@@ -496,7 +497,5 @@ def test_engine_no_rejit_across_steps(small_lm):
                         EngineConfig(n_slots=2, cache=CACHE))
     rng = np.random.default_rng(3)
     eng.run(_mixed_requests(rng, n=4))
-    traces = eng._decode_fn._cache_size()
-    assert traces == 1, f"decode retraced {traces} times"
-    traces = eng._chunk_fn._cache_size()
-    assert traces == 1, f"prefill chunk retraced {traces} times"
+    assert_compile_count(eng._decode_fn, 1, "decode")
+    assert_compile_count(eng._chunk_fn, 1, "prefill chunk")

@@ -334,14 +334,17 @@ def test_tp_engine_prefix_cache_token_identical_heads_regime():
 
 
 def test_tp_decode_hlo_exchanges_only_partials():
-    """Compile the sharded engine's decode step and parse its
-    collectives (``launch/hlo_analysis.py``): no full-KV all-gather in
-    either regime — the 'pages' regime moves only the (B, H, 1) max/Σ
-    partials plus the (B, H, 1, D) output psum, the 'heads' regime only
-    the replicated (B, H, 1, D) output."""
+    """Compile the sharded engine's decode step and hold it to the
+    analyzer's collective-budget predicate (``repro.analysis``): no
+    full-KV all-gather in either regime — the 'pages' regime moves only
+    the (B, H, 1) max/Σ partials plus the (B, H, 1, D) output psum, the
+    'heads' regime only the replicated (B, H, 1, D) output.  Same
+    budgets as the original PR 5 parse_collectives version; the
+    predicate's per-op cap is inclusive, hence the ``- 1``."""
     out = run_py(r"""
 from repro.runtime.paged_cache import decode_view, view_arrays
-from repro.launch.hlo_analysis import parse_collectives
+from repro.analysis import (collective_budget_violations,
+                            collectives_summary, donation_violations)
 
 run = run_cfg('rexp')
 for kvh, regime in [(1, 'pages'), (4, 'heads')]:
@@ -353,24 +356,20 @@ for kvh, regime in [(1, 'pages'), (4, 'heads')]:
         compiled = eng._decode_fn.lower(eng.params, view.tokens, eng.pools,
                                         view.block_tables,
                                         view.lengths).compile()
-    coll = parse_collectives(compiled.as_text())
+    text = compiled.as_text()
     pool_bytes = (CACHE.n_pages * CACHE.page_size * kvh
                   * arch.resolved_head_dim * 4)
     b, h, d = eng.n_slots, arch.n_heads, arch.resolved_head_dim
     # (B,H,1) partials (m, Σ) + (B,H,1,D) output, f32, 2x margin
-    partial_budget = 2 * b * h * (d + 2) * 4
-    total = coll['total']
-    ag = coll['all-gather']
-    assert ag.tensor_bytes < pool_bytes // 4, (
-        f'{regime}: all-gather moves {ag.tensor_bytes} B — KV-sized '
-        f'(pool is {pool_bytes} B/layer)')
-    assert total.tensor_bytes <= partial_budget, (
-        f'{regime}: collectives move {total.tensor_bytes} B, partial '
-        f'budget is {partial_budget} B')
-    if regime == 'pages':
-        assert coll['all-reduce'].count > 0, 'pages regime never reduced'
-    print(regime, 'collective bytes', total.tensor_bytes,
-          'pool bytes', pool_bytes)
+    bad = collective_budget_violations(
+        text,
+        max_tensor_bytes=2 * b * h * (d + 2) * 4,
+        max_op_tensor_bytes={'all-gather': pool_bytes // 4 - 1},
+        require=('all-reduce',) if regime == 'pages' else ())
+    assert not bad, f'{regime}: ' + '; '.join(bad)
+    # the pool pytree must still be donated in both regimes
+    assert not donation_violations(text, 2), regime
+    print(regime, collectives_summary(text)['total'])
 print('TP-HLO-OK')
 """)
     assert "TP-HLO-OK" in out

@@ -191,7 +191,8 @@ def test_kernel_under_jit_one_compile(rng):
     # different traced cursors, same shapes → no retrace
     fn(q, kp, vp, bt, qs - 2, kls - 2)
     fn(q, kp, vp, bt, jnp.zeros_like(qs), jnp.full_like(kls, 6))
-    assert fn._cache_size() == 1, f"retraced {fn._cache_size()} times"
+    from repro.analysis import assert_compile_count
+    assert_compile_count(fn, 1, "paged prefill kernel")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Repo-rule AST lint (stdlib only — no jax import, safe anywhere).
+
+Four rules the type system can't enforce:
+
+R1  host-sync allowlist — ``np.asarray`` / ``jax.device_get`` /
+    ``.block_until_ready()`` inside ``src/repro/runtime/`` must carry
+    the ``lint: allow-host-sync`` marker on the call's lines or the
+    line above.  The runtime package is the serving hot path: a device
+    fetch there blocks the dispatch pipeline, so every one must be
+    deliberate and documented (the engine's three intentional syncs
+    each explain why they are off the pipelined hot path).
+
+R2  host-module purity — scheduler and prefix-cache host code never
+    touches ``jnp.``: keeping them import-light and trace-free is what
+    lets the scheduler run while the device computes.
+
+R3  frozen configs — ``@dataclass`` classes named ``*Config`` must be
+    ``frozen=True``; configs key jit caches and scheduler decisions,
+    so mutation after engine construction would silently desynchronize.
+
+R4  no mutable default arguments anywhere in ``src/repro``.
+
+Exit 0 clean, 1 violations (listed one per line).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src" / "repro"
+
+ALLOW_MARKER = "lint: allow-host-sync"
+JNP_FREE_MODULES = ("runtime/scheduler.py", "runtime/prefix_cache.py")
+
+_HOST_SYNC_ATTRS = {"device_get", "block_until_ready"}
+
+
+def _is_host_sync_call(node: ast.Call) -> str | None:
+    """Name of the host-sync pattern a call matches, else None."""
+    f = node.func
+    if not isinstance(f, ast.Attribute):
+        return None
+    if f.attr == "asarray" and isinstance(f.value, ast.Name) \
+            and f.value.id in ("np", "numpy"):
+        return "np.asarray"
+    if f.attr == "device_get" and isinstance(f.value, ast.Name) \
+            and f.value.id == "jax":
+        return "jax.device_get"
+    if f.attr == "block_until_ready":
+        return ".block_until_ready"
+    return None
+
+
+def _has_marker(lines: list[str], node: ast.AST) -> bool:
+    hi = getattr(node, "end_lineno", node.lineno)
+    lo = node.lineno - 1                  # 0-based index of the call line
+    if any(ALLOW_MARKER in lines[i] for i in range(lo, min(hi, len(lines)))):
+        return True
+    # or on the line directly above (trailing marker on a sibling arg)
+    if lo > 0 and ALLOW_MARKER in lines[lo - 1]:
+        return True
+    # or anywhere in the contiguous comment block directly above
+    i = lo - 1
+    while i >= 0 and lines[i].lstrip().startswith("#"):
+        if ALLOW_MARKER in lines[i]:
+            return True
+        i -= 1
+    return False
+
+
+def _dataclass_frozen(cls: ast.ClassDef) -> tuple[bool, bool]:
+    """(is_dataclass, is_frozen) from the decorator list."""
+    is_dc = frozen = False
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = target.attr if isinstance(target, ast.Attribute) else \
+            target.id if isinstance(target, ast.Name) else ""
+        if name != "dataclass":
+            continue
+        is_dc = True
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    frozen = bool(kw.value.value)
+    return is_dc, frozen
+
+
+def _mutable_default(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("list", "dict", "set")
+    return False
+
+
+def lint_file(path: pathlib.Path) -> list[str]:
+    rel = path.relative_to(REPO).as_posix()
+    text = path.read_text()
+    lines = text.splitlines()
+    tree = ast.parse(text, filename=str(path))
+    out: list[str] = []
+    in_runtime = rel.startswith("src/repro/runtime/")
+    jnp_free = any(rel.endswith(m) for m in JNP_FREE_MODULES)
+
+    for node in ast.walk(tree):
+        if in_runtime and isinstance(node, ast.Call):
+            what = _is_host_sync_call(node)
+            if what and not _has_marker(lines, node):
+                out.append(
+                    f"{rel}:{node.lineno}: R1 {what} in runtime/ without "
+                    f"'{ALLOW_MARKER}' marker — host syncs on the serving "
+                    f"path must be annotated")
+        if jnp_free and isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "jnp":
+            out.append(f"{rel}:{node.lineno}: R2 jnp.{node.attr} in "
+                       f"host-only module")
+        if jnp_free and isinstance(node, (ast.Import, ast.ImportFrom)):
+            names = [a.asname or a.name for a in node.names]
+            mod = getattr(node, "module", "") or ""
+            if "jnp" in names or mod == "jax.numpy" \
+                    or "jax.numpy" in names:
+                out.append(f"{rel}:{node.lineno}: R2 jax.numpy import in "
+                           f"host-only module")
+        if isinstance(node, ast.ClassDef) and node.name.endswith("Config"):
+            is_dc, frozen = _dataclass_frozen(node)
+            if is_dc and not frozen:
+                out.append(f"{rel}:{node.lineno}: R3 dataclass "
+                           f"{node.name} must be frozen=True")
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defaults = list(node.args.defaults) + \
+                [d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                if _mutable_default(d):
+                    out.append(f"{rel}:{node.lineno}: R4 mutable default "
+                               f"argument in {node.name}()")
+    return out
+
+
+def main(argv=None) -> int:
+    paths = [pathlib.Path(p) for p in (argv or [])] or sorted(
+        SRC.rglob("*.py"))
+    violations: list[str] = []
+    for p in paths:
+        violations.extend(lint_file(p))
+    for v in violations:
+        print(v)
+    print(f"lint_repro: {len(violations)} violation(s) in "
+          f"{len(paths)} file(s)", file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
