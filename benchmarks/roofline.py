@@ -53,7 +53,7 @@ class Terms:
 
 def measure(cell) -> Terms:
     from repro.launch.cells import lower_cell
-    from repro.launch.hlo_analysis import parse_collectives
+    from repro.analysis import parse_collectives
     lowered = lower_cell(cell)
     compiled = lowered.compile()
     from repro.compat import cost_analysis

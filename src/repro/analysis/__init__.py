@@ -10,6 +10,11 @@ Three layers, composable and individually importable:
 * :mod:`repro.analysis.contracts` — per-compiled-step invariant specs
   and the checker behind ``python -m repro.analysis --check-all``
   (report committed as ``ANALYSIS_contracts.json``).
+* :mod:`repro.analysis.kernel_guard` — static VMEM/grid/overflow
+  analysis of the Pallas kernels from their declared ``kernel_spec()``s,
+  plus the per-policy LUT census and integer-Σ max-Lk bounds, behind
+  ``python -m repro.analysis --check-kernels`` (report committed as
+  ``ANALYSIS_kernels.json``).
 
 The repo-rule AST lint lives in ``tools/lint_repro.py`` (stdlib-only, no
 jax import) rather than here.
@@ -29,8 +34,16 @@ from repro.analysis.hlo_guard import (CollectiveOp, CollectiveStats,
 from repro.analysis.jaxpr_lint import (UpcastViolation, host_callback_eqns,
                                        iter_eqns, logits_escapes,
                                        lut_upcast_violations, trace_step)
+from repro.analysis.kernel_guard import (ClampProbe, KernelSpec, Operand,
+                                         PassSpec, Reduction, check_kernel,
+                                         check_kernels, kernel_registry,
+                                         pass_working_set, policy_ledger,
+                                         vmem_limit)
 
 __all__ = [
+    "ClampProbe", "KernelSpec", "Operand", "PassSpec", "Reduction",
+    "check_kernel", "check_kernels", "kernel_registry", "pass_working_set",
+    "policy_ledger", "vmem_limit",
     "CollectiveOp", "CollectiveStats", "assert_collective_budget",
     "assert_donated", "assert_no_host_transfers",
     "collective_budget_violations", "collective_census",

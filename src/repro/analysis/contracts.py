@@ -329,6 +329,59 @@ def tp_contracts() -> list[ContractResult]:
 
 
 # ---------------------------------------------------------------------------
+# Kernel-level contracts (wrapping the static kernel guard's verdicts)
+# ---------------------------------------------------------------------------
+
+
+def kernel_contracts(report: dict | None = None) -> list[ContractResult]:
+    """Kernel-guard verdicts as contracts, for ``--check-all`` parity.
+
+    No tracing or compilation happens here — the guard
+    (:mod:`repro.analysis.kernel_guard`) derives everything from the
+    kernels' static declarations.  Wrapping its verdicts as
+    ``ContractResult``s puts kernel edits under the SAME committed
+    report and ratchet as the compiled-step contracts: a widened
+    BlockSpec, a raised qmax, or a shrunk budget flips a ``kernel/*``
+    contract to *violation* and CI fails.
+    """
+    from repro.analysis import kernel_guard
+    rep = kernel_guard.check_kernels() if report is None else report
+    out: list[ContractResult] = []
+    for name, entry in sorted(rep["kernels"].items()):
+        spec = ContractSpec(
+            name=f"kernel/{name}", topology="kernel", step=entry["kind"],
+            policy="all",
+            notes="static kernel-guard verdict: VMEM working sets, grid "
+                  "coverage, pool-index clamps")
+        info = {"geometries": sorted(entry["geometries"])}
+        if entry["kind"] == "pallas":
+            info["vmem_bytes"] = entry["vmem_bytes"]
+            info["vmem_limit"] = rep["vmem_limit"]
+        out.append(ContractResult(spec=spec,
+                                  violations=list(entry["violations"]),
+                                  info=info))
+    for pname, p in sorted(rep["policies"].items()):
+        spec = ContractSpec(
+            name=f"kernel/policy/{pname}", topology="kernel", step="tables",
+            policy=pname,
+            notes="LUT byte census + integer-Σ overflow bound")
+        out.append(ContractResult(
+            spec=spec, violations=list(p["violations"]),
+            info={"lut_bytes": p["lut_bytes"], "max_lk": p["max_lk"],
+                  "margin": p["margin"]}))
+    out.append(ContractResult(
+        spec=ContractSpec(
+            name="kernel/sigma-acc-limit", topology="kernel", step="global",
+            policy="all",
+            notes="declared Σ-accumulator dtypes agree with the "
+                  "SIGMA_ACC_LIMIT constant the bounds derive from"),
+        violations=list(rep["violations"]),
+        info={"sigma_acc_limit": rep["sigma_acc_limit"],
+              "max_contexts": rep["max_contexts"]}))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Report + ratchet
 # ---------------------------------------------------------------------------
 

@@ -27,7 +27,7 @@ import math
 
 import numpy as np
 
-from repro.core.precision import Precision, get_precision
+from repro.core.precision import Precision, get_precision, sigma_acc_max_lk
 
 # ---------------------------------------------------------------------------
 # Table 8 defaults (NLP experiments) per precision name.
@@ -60,6 +60,33 @@ ENTRY_BYTES = {"int16": 2, "uint8": 1, "uint4": 1, "uint2": 1}
 
 SCALE_EX = 0.1  # paper §4.2: scale_{e^x} = 0.1 for all precisions
 SCALE_SUM = 1.0  # paper §4.2: scale_Σ = 1.0
+
+#: The paper's headline table budget: every per-policy LUT bundle stays
+#: within 1.5 KB (Table 8 tops out at the int16 2D-LUT pair; the uint8
+#: bundle is the "~700 Bytes" abstract claim).  ``analysis.kernel_guard``
+#: ratchets the measured census against this.
+LUT_BYTE_BUDGET = 1536
+
+
+def _check_max_context(tables: "RexpTables | Lut2DTables",
+                       max_context: int | None) -> None:
+    """Build-time mirror of the static overflow proof.
+
+    A table bundle destined for an engine whose pool admits
+    ``max_context`` keys per row must satisfy ``qmax · max_context ≤``
+    the Σ-accumulator limit — otherwise the integer Σ can overflow (lose
+    f32 integer exactness) at full context and the softmax silently
+    saturates.  Fail at build, not at token 16M.
+    """
+    if max_context is None:
+        return
+    bound = tables.max_lk
+    if max_context > bound:
+        raise ValueError(
+            f"{type(tables).__name__}({tables.precision.name}): "
+            f"max_context {max_context} exceeds the integer-Σ overflow "
+            f"bound max_lk={bound} (qmax={tables.precision.qmax}); use a "
+            f"narrower precision or a smaller context")
 
 
 def _round_half_even(x: np.ndarray | float) -> np.ndarray:
@@ -175,6 +202,17 @@ class RexpTables:
         eb = ENTRY_BYTES[self.precision.name]
         return (self.lut_recip_exp.size + self.lut_alpha.size) * eb
 
+    @property
+    def max_lk(self) -> int:
+        """Integer-Σ overflow bound: max keys per softmax row."""
+        return sigma_acc_max_lk(self.precision.qmax)
+
+    def __repr__(self) -> str:
+        return (f"RexpTables({self.precision.name}, "
+                f"lut_recip_exp=1x{self.lut_recip_exp.size}, "
+                f"lut_alpha=1x{self.lut_alpha.size}, "
+                f"nbytes={self.nbytes}, max_lk={self.max_lk})")
+
 
 @dataclasses.dataclass(frozen=True)
 class Lut2DTables:
@@ -192,16 +230,33 @@ class Lut2DTables:
         eb = ENTRY_BYTES[self.precision.name]
         return (self.lut_exp.size + self.lut_sigma.size) * eb
 
+    @property
+    def max_lk(self) -> int:
+        """Integer-Σ overflow bound: max keys per softmax row."""
+        return sigma_acc_max_lk(self.precision.qmax)
+
+    def __repr__(self) -> str:
+        r, c = self.lut_sigma.shape
+        return (f"Lut2DTables({self.precision.name}, "
+                f"lut_exp=1x{self.lut_exp.size}, lut_sigma={r}x{c}, "
+                f"exp_step={self.exp_step}, "
+                f"nbytes={self.nbytes}, max_lk={self.max_lk})")
+
 
 def build_rexp_tables(
-    precision: str | Precision, alpha_len: int | None = None
+    precision: str | Precision, alpha_len: int | None = None,
+    *, max_context: int | None = None,
 ) -> RexpTables:
+    """``max_context`` (when known, e.g. the engine pool's) asserts the
+    integer-Σ overflow bound at build time — see :func:`_check_max_context`."""
     p = get_precision(precision)
-    return RexpTables(
+    t = RexpTables(
         precision=p,
         lut_recip_exp=build_lut_recip_exp(p),
         lut_alpha=build_lut_alpha(p, alpha_len),
     )
+    _check_max_context(t, max_context)
+    return t
 
 
 def build_lut2d_tables(
@@ -210,13 +265,39 @@ def build_lut2d_tables(
     exp_len: int | None = None,
     n_rows: int | None = None,
     n_cols: int | None = None,
+    *, max_context: int | None = None,
 ) -> Lut2DTables:
+    """``max_context`` (when known, e.g. the engine pool's) asserts the
+    integer-Σ overflow bound at build time — see :func:`_check_max_context`."""
     p = get_precision(precision)
     dstep, _ = DEFAULT_EXP_TABLE[p.name]
     step = dstep if exp_step is None else exp_step
-    return Lut2DTables(
+    t = Lut2DTables(
         precision=p,
         lut_exp=build_lut_exp(p, step, exp_len),
         lut_sigma=build_lut_sigma(p, n_rows, n_cols),
         exp_step=step,
     )
+    _check_max_context(t, max_context)
+    return t
+
+
+def table_census(tables: RexpTables | Lut2DTables) -> dict:
+    """Machine-readable table metadata (the kernel guard's LUT census).
+
+    Per-table entry counts and bytes under the paper's accounting
+    (entries × :data:`ENTRY_BYTES`), plus the derived overflow bound.
+    """
+    eb = ENTRY_BYTES[tables.precision.name]
+    if isinstance(tables, RexpTables):
+        per = {"lut_recip_exp": tables.lut_recip_exp.size * eb,
+               "lut_alpha": tables.lut_alpha.size * eb}
+    else:
+        per = {"lut_exp": tables.lut_exp.size * eb,
+               "lut_sigma": tables.lut_sigma.size * eb}
+    return {"precision": tables.precision.name,
+            "qmax": tables.precision.qmax,
+            "entry_bytes": eb,
+            "tables": per,
+            "lut_bytes": tables.nbytes,
+            "max_lk": tables.max_lk}

@@ -58,6 +58,13 @@ from repro.kernels.common import dequant_scope, lut_int_scope
 Array = jax.Array
 
 
+# The integer-Σ accumulator range constants live in ``core.precision``
+# (stdlib-only, importable by the numpy-only table builder and the
+# static analyzers); re-exported here because this module is where the
+# "Σ accumulated in f32, exact below 2^24" semantics are documented.
+from repro.core.precision import (F32_EXACT_LIMIT, INT32_LIMIT,  # noqa: F401
+                                  SIGMA_ACC_LIMIT, sigma_acc_max_lk)
+
 # ---------------------------------------------------------------------------
 # Shared helpers
 # ---------------------------------------------------------------------------

@@ -16,6 +16,40 @@ import dataclasses
 import math
 
 
+# ---------------------------------------------------------------------------
+# Integer-Σ accumulator range (the overflow-proof constants)
+# ---------------------------------------------------------------------------
+
+#: f32 represents every integer up to 2^24 exactly; past it, integer
+#: accumulation silently loses low bits.
+F32_EXACT_LIMIT = 1 << 24
+
+#: largest int32 — the width a hardware integer Σ accumulator would carry.
+INT32_LIMIT = (1 << 31) - 1
+
+#: The binding Σ-accumulator ceiling.  The reference semantics
+#: (``core.lut_softmax``) and every Pallas kernel accumulate the integer
+#: numerators in f32, so the f32-exact limit binds before int32 would:
+#: ``Σ e_int ≤ qmax · Lk`` must stay ≤ 2^24 for the integer pipeline to
+#: be bit-exact.  ``repro.analysis.kernel_guard`` derives the per-policy
+#: max-Lk bound from this constant and ratchets it in
+#: ``ANALYSIS_kernels.json``; ``lut_builder`` mirrors it at table-build
+#: time.
+SIGMA_ACC_LIMIT = min(F32_EXACT_LIMIT, INT32_LIMIT)
+
+
+def sigma_acc_max_lk(qmax: int) -> int:
+    """Largest row length Lk with a provably exact integer Σ.
+
+    Worst case every numerator hits the table ceiling ``qmax``, so
+    ``Σ e_int ≤ qmax · Lk``; the Σ stays exactly representable (f32) and
+    inside int32 iff ``Lk ≤ SIGMA_ACC_LIMIT // qmax``.
+    """
+    if qmax < 1:
+        raise ValueError(f"qmax {qmax} < 1")
+    return SIGMA_ACC_LIMIT // qmax
+
+
 @dataclasses.dataclass(frozen=True)
 class Precision:
     """A LUT quantization precision (paper Tables 5 and 8)."""
@@ -27,6 +61,11 @@ class Precision:
     def qmax(self) -> int:
         """Quantization ceiling ``2**w - 1`` (paper's ``prec``)."""
         return (1 << self.w) - 1
+
+    @property
+    def max_lk(self) -> int:
+        """Largest keys-per-row with a provably exact integer Σ."""
+        return sigma_acc_max_lk(self.qmax)
 
     @property
     def x_q(self) -> int:

@@ -52,6 +52,13 @@ def dequant_scope():
 #: buffering and spills have room.
 VMEM_BUDGET = 48 * 1024 * 1024
 
+#: fraction of :data:`VMEM_BUDGET` the static kernel guard keeps free:
+#: ``analysis.kernel_guard`` asserts every kernel pass's derived working
+#: set (streamed operands double-buffered) stays under
+#: ``VMEM_BUDGET * (1 - VMEM_GUARD_HEADROOM)`` at every dispatch
+#: geometry, leaving room for Mosaic spills and semaphore state.
+VMEM_GUARD_HEADROOM = 0.25
+
 MXU_ALIGN = 128  # MXU systolic dims; block shapes are multiples of this
 SUBLANE = 8
 

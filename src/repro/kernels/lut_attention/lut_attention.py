@@ -247,6 +247,62 @@ def _lut_spec(arr):
     return pl.BlockSpec(arr.shape, lambda bi, hi, qi, ki, _nd=nd: (0,) * _nd)
 
 
+def kernel_spec(geom):
+    """Static declaration for :mod:`repro.analysis.kernel_guard`.
+
+    Built from the SAME ``_specs`` / ``_lut_spec`` helpers the launcher
+    dispatches with, at the launcher's own block-size policy, so the
+    guard analyzes the real grid and index maps.  Table operands use the
+    worst-case shapes (int16 — the largest shipped tables) so the VMEM
+    accounting upper-bounds every policy.
+    """
+    from repro.analysis.kernel_guard import KernelSpec, Operand, PassSpec
+    from repro.core.lut_builder import build_lut2d_tables, build_rexp_tables
+
+    b, h, kvh, d = geom["b"], geom["h"], geom["kvh"], geom["dh"]
+    lq, lk = geom["lq"], geom["lk"]
+    bq = min(256, round_up(lq, 8))
+    bk = min(256, round_up(lk, 128))
+    lq_p, lk_p = round_up(lq, bq), round_up(lk, bk)
+    grid = (b, h, lq_p // bq, lk_p // bk)  # K axis innermost (sequential)
+    q_spec, k_spec, v_spec, m_spec, o_spec = _specs(b, h, kvh, lq_p, lk_p,
+                                                    d, bq, bk)
+
+    rexp = build_rexp_tables("int16")
+    l2d = build_lut2d_tables("int16")
+    lut_re = rexp.lut_recip_exp[None, :]
+    lut_a = rexp.lut_alpha[None, :]
+    lut_e = l2d.lut_exp[None, :]
+    lut_sig = l2d.lut_sigma
+
+    q = Operand("q", (b, h, lq_p, d), q_spec)
+    k = Operand("k", (b, kvh, lk_p, d), k_spec)
+    v = Operand("v", (b, kvh, lk_p, d), v_spec)
+    m = Operand("m", (b, h, lq_p), m_spec)
+    s = Operand("s_sum", (b, h, lq_p), m_spec)
+    o = Operand("out", (b, h, lq_p, d), o_spec)
+    t_re = Operand("lut_recip_exp", lut_re.shape, _lut_spec(lut_re), "int32")
+    t_a = Operand("lut_alpha", lut_a.shape, _lut_spec(lut_a), "int32")
+    t_e = Operand("lut_exp", lut_e.shape, _lut_spec(lut_e), "int32")
+    t_s = Operand("lut_sigma", lut_sig.shape, _lut_spec(lut_sig), "int32")
+
+    passes = (
+        PassSpec("rowmax", grid, (q, k), (m,)),
+        PassSpec("sum", grid, (q, k, m, t_e), (s,),
+                 sigma_acc=True, acc_dtype="float32",
+                 notes="integer Σ accumulated f32-exact in the resident ref"),
+        PassSpec("fused_sum_av", grid, (q, k, v, m, t_re, t_a), (s, o),
+                 sigma_acc=True, acc_dtype="float32",
+                 notes="REXP fused-requant variant (S and U together)"),
+        PassSpec("rexp_av", grid, (q, k, v, m, s, t_re, t_a), (o,)),
+        PassSpec("lut2d_av", grid, (q, k, v, m, s, t_e, t_s), (o,)),
+    )
+    return KernelSpec(
+        name="lut_attention", module=__name__, kind="pallas", passes=passes,
+        notes="dense blocked multi-pass; accumulators resident across the "
+              "sequential K axis")
+
+
 def lut_attention_pallas(
     q: Array, k: Array, v: Array,
     tables: RexpTables | Lut2DTables,

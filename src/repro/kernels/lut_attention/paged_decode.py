@@ -177,6 +177,76 @@ def _lut_spec(arr):
                         lambda b, h, p, bt_ref, kl_ref, _nd=nd: (0,) * _nd)
 
 
+def _grid_specs(g, dh, page_size):
+    """The decode dispatch's BlockSpecs — single source for the launcher
+    and for ``kernel_spec`` (the static guard's declaration)."""
+    q_spec = pl.BlockSpec((1, 1, g, dh),
+                          lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0, 0))
+    kv_spec = _pool_spec(page_size, dh)
+    acc_spec = pl.BlockSpec((1, 1, g),
+                            lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0))
+    o_spec = pl.BlockSpec((1, 1, g, dh),
+                          lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0, 0))
+    return q_spec, kv_spec, acc_spec, o_spec
+
+
+def kernel_spec(geom):
+    """Static declaration for :mod:`repro.analysis.kernel_guard`.
+
+    Uses the launcher's own ``_grid_specs`` / ``_pool_spec``; the
+    scalar-prefetch probe arrays exercise both extremes of the declared
+    block-table domain ``[0, n_pages)`` (0 is the null-page placeholder,
+    the allocator issues ids in ``[1, n_pages)``), so the in-range check
+    is a clamp proof for the pool indirection.  Table operands use the
+    worst-case (int16 2D-LUT) shapes.
+    """
+    import numpy as np
+
+    from repro.analysis.kernel_guard import KernelSpec, Operand, PassSpec
+    from repro.core.lut_builder import build_lut2d_tables
+
+    b, h, kvh, dh = geom["b"], geom["h"], geom["kvh"], geom["dh"]
+    g = h // kvh
+    page_size, mp, n_pages = geom["page_size"], geom["mp"], geom["n_pages"]
+    grid = (b, kvh, mp)  # page axis innermost (sequential accumulation)
+    q_spec, kv_spec, acc_spec, o_spec = _grid_specs(g, dh, page_size)
+
+    bt = np.zeros((b, mp), np.int32)
+    bt[:, 1::2] = n_pages - 1  # both domain extremes appear
+    kl = np.full((b,), page_size * mp, np.int32)
+    prefetch = (bt, kl)
+
+    l2d = build_lut2d_tables("int16")
+    lut_main = l2d.lut_exp[None, :]
+    # aux slot carries α (rexp, (1,16)) or σ (lut2d); σ (11,60) is worst
+    lut_aux = l2d.lut_sigma
+
+    q = Operand("q", (b, kvh, g, dh), q_spec)
+    kv = Operand("k_pages", (n_pages, page_size, kvh, dh), kv_spec,
+                 table_indexed=True, index_domain=(0, n_pages))
+    vv = Operand("v_pages", (n_pages, page_size, kvh, dh), kv_spec,
+                 table_indexed=True, index_domain=(0, n_pages))
+    m = Operand("m", (b, kvh, g), acc_spec)
+    s = Operand("s_sum", (b, kvh, g), acc_spec)
+    o = Operand("out", (b, kvh, g, dh), o_spec)
+    t_main = Operand("lut_main", lut_main.shape, _lut_spec(lut_main), "int32")
+    t_aux = Operand("lut_aux", lut_aux.shape, _lut_spec(lut_aux), "int32")
+
+    passes = (
+        PassSpec("rowmax", grid, (q, kv), (m,), scalar_prefetch=prefetch),
+        PassSpec("sum", grid, (q, kv, m, t_main), (s,),
+                 scalar_prefetch=prefetch, sigma_acc=True,
+                 acc_dtype="float32",
+                 notes="integer Σ accumulated f32-exact in the resident ref"),
+        PassSpec("weight", grid, (q, kv, vv, m, s, t_main, t_aux), (o,),
+                 scalar_prefetch=prefetch),
+    )
+    return KernelSpec(
+        name="paged_decode", module=__name__, kind="pallas", passes=passes,
+        notes="streams pages from the pool via scalar-prefetched block "
+              "tables; one page DMA per grid step")
+
+
 def paged_decode_attention(
     q: Array,              # (B, H, 1, Dh) single-token queries
     k_pages: Array,        # (num_pages, page_size, KVH, Dh) shared pool
@@ -217,13 +287,7 @@ def paged_decode_attention(
     block_tables = block_tables.astype(jnp.int32)
     kv_lens = kv_lens.astype(jnp.int32)
 
-    q_spec = pl.BlockSpec((1, 1, g, dh),
-                          lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0, 0))
-    kv_spec = _pool_spec(page_size, dh)
-    acc_spec = pl.BlockSpec((1, 1, g),
-                            lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0))
-    o_spec = pl.BlockSpec((1, 1, g, dh),
-                          lambda bi, hi, p, bt_ref, kl_ref: (bi, hi, 0, 0))
+    q_spec, kv_spec, acc_spec, o_spec = _grid_specs(g, dh, page_size)
     grid = (b, kvh, mp)  # page axis innermost → sequential accumulation
 
     def spec(in_specs, out_specs):

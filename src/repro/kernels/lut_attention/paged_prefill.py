@@ -192,6 +192,79 @@ def _lut_spec(arr):
         lambda b, h, p, bt_ref, kl_ref, qs_ref, _nd=nd: (0,) * _nd)
 
 
+def _grid_specs(g, c, dh, page_size):
+    """The prefill dispatch's BlockSpecs — single source for the launcher
+    and for ``kernel_spec`` (the static guard's declaration)."""
+    q_spec = pl.BlockSpec(
+        (1, 1, g, c, dh),
+        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0, 0))
+    kv_spec = _pool_spec(page_size, dh)
+    acc_spec = pl.BlockSpec(
+        (1, 1, g, c),
+        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0))
+    o_spec = pl.BlockSpec(
+        (1, 1, g, c, dh),
+        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0, 0))
+    return q_spec, kv_spec, acc_spec, o_spec
+
+
+def kernel_spec(geom):
+    """Static declaration for :mod:`repro.analysis.kernel_guard`.
+
+    Uses the launcher's own ``_grid_specs`` / ``_pool_spec``; the probe
+    block table exercises both extremes of the declared domain
+    ``[0, n_pages)``, ``q_start`` spans 0 and a mid-prompt cursor.
+    Table operands use the worst-case (int16 2D-LUT) shapes.
+    """
+    import numpy as np
+
+    from repro.analysis.kernel_guard import KernelSpec, Operand, PassSpec
+    from repro.core.lut_builder import build_lut2d_tables
+
+    b, h, kvh, dh = geom["b"], geom["h"], geom["kvh"], geom["dh"]
+    g = h // kvh
+    c = geom["chunk"]
+    page_size, mp, n_pages = geom["page_size"], geom["mp"], geom["n_pages"]
+    grid = (b, kvh, mp)  # page axis innermost (sequential accumulation)
+    q_spec, kv_spec, acc_spec, o_spec = _grid_specs(g, c, dh, page_size)
+
+    bt = np.zeros((b, mp), np.int32)
+    bt[:, 1::2] = n_pages - 1  # both domain extremes appear
+    kl = np.full((b,), page_size * mp, np.int32)
+    qs = np.arange(b, dtype=np.int32) * c  # chunk cursors incl. 0
+    prefetch = (bt, kl, qs)
+
+    l2d = build_lut2d_tables("int16")
+    lut_main = l2d.lut_exp[None, :]
+    # aux slot carries α (rexp, (1,16)) or σ (lut2d); σ (11,60) is worst
+    lut_aux = l2d.lut_sigma
+
+    q = Operand("q", (b, kvh, g, c, dh), q_spec)
+    kv = Operand("k_pages", (n_pages, page_size, kvh, dh), kv_spec,
+                 table_indexed=True, index_domain=(0, n_pages))
+    vv = Operand("v_pages", (n_pages, page_size, kvh, dh), kv_spec,
+                 table_indexed=True, index_domain=(0, n_pages))
+    m = Operand("m", (b, kvh, g, c), acc_spec)
+    s = Operand("s_sum", (b, kvh, g, c), acc_spec)
+    o = Operand("out", (b, kvh, g, c, dh), o_spec)
+    t_main = Operand("lut_main", lut_main.shape, _lut_spec(lut_main), "int32")
+    t_aux = Operand("lut_aux", lut_aux.shape, _lut_spec(lut_aux), "int32")
+
+    passes = (
+        PassSpec("rowmax", grid, (q, kv), (m,), scalar_prefetch=prefetch),
+        PassSpec("sum", grid, (q, kv, m, t_main), (s,),
+                 scalar_prefetch=prefetch, sigma_acc=True,
+                 acc_dtype="float32",
+                 notes="integer Σ accumulated f32-exact in the resident ref"),
+        PassSpec("weight", grid, (q, kv, vv, m, s, t_main, t_aux), (o,),
+                 scalar_prefetch=prefetch),
+    )
+    return KernelSpec(
+        name="paged_prefill", module=__name__, kind="pallas", passes=passes,
+        notes="chunked prefill streaming pages from the pool; causal "
+              "frontier handled per element via prefetched q_start")
+
+
 def paged_prefill_attention(
     q: Array,              # (B, H, C, Dh) chunk queries
     k_pages: Array,        # (num_pages, page_size, KVH, Dh) shared pool
@@ -235,16 +308,7 @@ def paged_prefill_attention(
     kv_lens = kv_lens.astype(jnp.int32)
     q_start = jnp.asarray(q_start, jnp.int32)
 
-    q_spec = pl.BlockSpec(
-        (1, 1, g, c, dh),
-        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0, 0))
-    kv_spec = _pool_spec(page_size, dh)
-    acc_spec = pl.BlockSpec(
-        (1, 1, g, c),
-        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0))
-    o_spec = pl.BlockSpec(
-        (1, 1, g, c, dh),
-        lambda bi, hi, p, bt_ref, kl_ref, qs_ref: (bi, hi, 0, 0, 0))
+    q_spec, kv_spec, acc_spec, o_spec = _grid_specs(g, c, dh, page_size)
     grid = (b, kvh, mp)  # page axis innermost → sequential accumulation
 
     def spec(in_specs, out_specs):

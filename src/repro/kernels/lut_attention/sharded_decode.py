@@ -31,6 +31,30 @@ from repro.core.policies import SoftmaxPolicy
 Array = jax.Array
 
 
+def kernel_spec(geom):
+    """Static declaration for :mod:`repro.analysis.kernel_guard`.
+
+    Declares the length-sharded decode's cross-device reductions — the
+    whole point of this kernel is that ONLY (B, H, 1)-shaped partials
+    cross the mesh (vs the ~GiB per-layer KV all-gather it replaces), so
+    the guard pins the wire footprint to the partial budget.
+    """
+    from repro.analysis.kernel_guard import KernelSpec, Reduction
+
+    b, h, dh = geom["b"], geom["h"], geom["dh"]
+    reductions = (
+        Reduction("pmax", (b, h, 1)),       # global row max
+        Reduction("psum", (b, h, 1)),       # global integer Σ (f32-exact)
+        Reduction("psum", (b, h, 1, dh)),   # U = Σ local e_int · v
+    )
+    return KernelSpec(
+        name="sharded_decode", module=__name__, kind="shard_map",
+        reductions=reductions,
+        wire_budget=2 * b * h * 1 * (dh + 2) * 4,
+        notes="length-sharded contiguous cache; fused-requant REXP "
+              "epilogue applies α(S)·inv² to the psum'd U")
+
+
 def lut_decode_sharded(
     q: Array, k: Array, v: Array, policy: SoftmaxPolicy, *,
     kv_len: Array, mesh: Mesh, batch_axes, seq_axis: str = "model",

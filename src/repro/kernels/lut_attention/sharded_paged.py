@@ -72,6 +72,36 @@ def _tp(mesh: Mesh, axis: str) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Slab-local page-id clamps ('pages' regime)
+#
+# Module-level so ``kernel_spec`` can hand them to the static guard,
+# which probes them numerically at the slab boundaries.
+# ---------------------------------------------------------------------------
+
+
+def _gather_page_ids(bt: Array, lo: int, slab: int):
+    """(local mask, slab-local rows) for reading a device's page slab.
+
+    Non-local pages clamp to row 0 — a real, in-slab row whose keys are
+    −inf-masked by the ``local`` mask, so the read is safe and the value
+    never contributes.
+    """
+    local = (bt >= lo) & (bt < lo + slab)
+    return local, jnp.where(local, bt - lo, 0)
+
+
+def _scatter_page_ids(ph: Array, lo: int, slab: int) -> Array:
+    """Slab-local rows for writing into a device's page slab.
+
+    Non-local pages map to ``slab`` — one past the end — so
+    ``.at[...].set(mode='drop')`` discards them; a clipped foreign write
+    can never collide with a real local one.
+    """
+    local = (ph >= lo) & (ph < lo + slab)
+    return jnp.where(local, ph - lo, slab)
+
+
+# ---------------------------------------------------------------------------
 # Faithful per-element σ from (global max, global Σ) — bitwise the
 # ``ops._policy_softmax`` pipeline, split so the two reductions can psum
 # ---------------------------------------------------------------------------
@@ -151,8 +181,7 @@ def _partials_body(policy: SoftmaxPolicy, tables, scale: float, causal: bool,
 
     def body(q, k_slab, v_slab, bt, q_start, kv_lens):
         lo = jax.lax.axis_index(axis) * slab
-        local = (bt >= lo) & (bt < lo + slab)          # (B, mp)
-        lbt = jnp.where(local, bt - lo, 0)
+        local, lbt = _gather_page_ids(bt, lo, slab)    # (B, mp)
         k_view = _ops.gather_pages(k_slab, lbt)        # (B, KVH, mp·ps, D)
         v_view = _ops.gather_pages(v_slab, lbt)
         lq, ps = q.shape[2], k_slab.shape[1]
@@ -256,6 +285,44 @@ def paged_attention_sharded(
     )(q, k_pages, v_pages, block_tables, qs, kv_lens)
 
 
+def kernel_spec(geom):
+    """Static declaration for :mod:`repro.analysis.kernel_guard`.
+
+    A shard_map kernel has no BlockSpecs; it declares instead the
+    'pages'-regime cross-device reductions (checked against the
+    (B, H, Lq)-partial wire budget — never KV-sized) and the slab-local
+    page-id clamps, which the guard probes numerically at the slab
+    boundaries of the first and last shard.
+    """
+    from repro.analysis.kernel_guard import ClampProbe, KernelSpec, Reduction
+
+    b, h, dh = geom["b"], geom["h"], geom["dh"]
+    c = geom["chunk"]  # worst-case Lq (prefill chunk; decode is Lq=1)
+    n_pages, tp = geom["n_pages"], geom["tp"]
+    slab = n_pages // tp
+
+    reductions = (
+        Reduction("pmax", (b, h, c, 1)),        # global row max
+        Reduction("psum", (b, h, c, 1)),        # global integer Σ (f32-exact)
+        Reduction("psum", (b, h, c, dh)),       # Σ local σ·V
+    )
+    clamps = tuple(
+        ClampProbe(f"{name}@shard{idx}", fn=fn, lo=idx * slab, slab=slab,
+                   n_pages=n_pages, mode=mode)
+        for idx in (0, tp - 1)
+        for name, fn, mode in (
+            ("gather_page_ids",
+             lambda ids, lo, s: _gather_page_ids(ids, lo, s)[1], "mask"),
+            ("scatter_page_ids", _scatter_page_ids, "drop"),
+        ))
+    return KernelSpec(
+        name="sharded_paged", module=__name__, kind="shard_map",
+        reductions=reductions, clamps=clamps,
+        wire_budget=2 * b * h * c * (dh + 2) * 4,
+        notes="'pages' regime: page-axis-sharded pool, (B, H, Lq) partial "
+              "reductions; 'heads' regime runs collective-free")
+
+
 # ---------------------------------------------------------------------------
 # Slab-local K/V scatter ('pages' regime)
 # ---------------------------------------------------------------------------
@@ -281,8 +348,7 @@ def scatter_chunk_sharded(
 
     def body(kp, vp, ph, of, kt, vt):
         lo = jax.lax.axis_index(axis) * slab
-        local = (ph >= lo) & (ph < lo + slab)
-        lph = jnp.where(local, ph - lo, slab)  # out of range → dropped
+        lph = _scatter_page_ids(ph, lo, slab)  # out of range → dropped
         kp = kp.at[lph, of].set(kt, mode="drop")
         vp = vp.at[lph, of].set(vt, mode="drop")
         return kp, vp

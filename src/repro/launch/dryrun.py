@@ -22,7 +22,7 @@ import jax
 
 from repro.configs import ARCHS, SHAPES, shape_applicable, get_arch
 from repro.launch.cells import build_cell, lower_cell
-from repro.launch.hlo_analysis import collectives_summary
+from repro.analysis import collectives_summary
 from repro.launch.mesh import make_production_mesh
 
 HBM_PER_CHIP = 16 * 1024**3  # TPU v5e: 16 GiB

@@ -3,15 +3,21 @@
 The parser grew into the static-analysis subsystem at
 :mod:`repro.analysis.hlo_guard` (collective census with async-start and
 inside-while awareness, donation aliasing, host-transfer detection).
-This module keeps the historical import path for the roofline,
-``launch/dryrun.py`` and older tests; new code should import from
-``repro.analysis`` directly.
+This module keeps the historical import path alive for external users
+one release longer; everything in-repo imports from ``repro.analysis``
+directly, and importing this shim warns.
 """
 
 from __future__ import annotations
 
+import warnings
+
 from repro.analysis.hlo_guard import (CollectiveStats, collective_census,
                                       collectives_summary, parse_collectives)
+
+warnings.warn(
+    "repro.launch.hlo_analysis is deprecated; import from repro.analysis "
+    "(hlo_guard) instead", DeprecationWarning, stacklevel=2)
 
 __all__ = ["CollectiveStats", "collective_census", "collectives_summary",
            "parse_collectives"]

@@ -287,6 +287,20 @@ class ServingEngine:
         self.config = config
         mesh = config.mesh
         cache = config.cache
+        # Runtime mirror of the kernel guard's static overflow proof: the
+        # integer Σ is accumulated in f32 (exact below 2^24), so rows may
+        # carry at most max_lk = SIGMA_ACC_LIMIT // qmax keys.
+        policy = run.softmax_policy
+        if policy.impl != "exact":
+            from repro.core.precision import get_precision
+            bound = get_precision(policy.precision).max_lk
+            if cache.max_context > bound:
+                raise ValueError(
+                    f"cache max_context {cache.max_context} exceeds the "
+                    f"integer-Σ overflow bound max_lk={bound} for "
+                    f"{policy.impl}/{policy.precision}: qmax·Lk must stay "
+                    f"under the f32-exact Σ limit; shrink max_pages_per_seq"
+                    f"·page_size or pick a narrower table precision")
         self.mesh = mesh
         self.tp = PT.mesh_model_tp(mesh)
         if mesh is not None:

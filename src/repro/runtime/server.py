@@ -53,6 +53,8 @@ class RequestStream:
     def __init__(self, loop: asyncio.AbstractEventLoop):
         self._loop = loop
         self._tokens: asyncio.Queue = asyncio.Queue()
+        # constructed by the async submit path, so this runs ON the loop
+        # thread — the one sanctioned direct loop call (lint: allow-loop-call)
         self._result: asyncio.Future = loop.create_future()
         self.request_id: int | None = None
 

@@ -1,12 +1,12 @@
 """Unit tests for the HLO collective parser (roofline third term).
 
-Imports go through the historical ``launch/hlo_analysis`` path on
-purpose: it is now a shim over ``repro.analysis.hlo_guard`` and these
-tests double as the shim's compatibility gate.  The census-level tests
-(async variants, while-loop residency) live in ``test_analysis.py``.
+The parser lives in ``repro.analysis.hlo_guard``; the historical
+``launch/hlo_analysis`` path is a deprecated shim whose warning and
+re-exports are pinned at the bottom.  The census-level tests (async
+variants, while-loop residency) live in ``test_analysis.py``.
 """
 
-from repro.launch.hlo_analysis import parse_collectives
+from repro.analysis import parse_collectives
 
 HLO = """
 HloModule test
@@ -89,9 +89,16 @@ def test_async_reduce_scatter_and_all_to_all_start_counted():
                - (7 / 8) * (8 * 32 * 4)) < 1
 
 
-def test_shim_reexports_from_analysis():
-    """launch/hlo_analysis is a shim: same objects as repro.analysis."""
+def test_shim_warns_and_reexports_from_analysis():
+    """launch/hlo_analysis: deprecated shim, same objects, warns on import."""
+    import importlib
+    import sys
+
+    import pytest
+
     from repro.analysis import hlo_guard
-    from repro.launch import hlo_analysis
+    sys.modules.pop("repro.launch.hlo_analysis", None)
+    with pytest.warns(DeprecationWarning, match="repro.analysis"):
+        hlo_analysis = importlib.import_module("repro.launch.hlo_analysis")
     assert hlo_analysis.parse_collectives is hlo_guard.parse_collectives
     assert hlo_analysis.CollectiveStats is hlo_guard.CollectiveStats

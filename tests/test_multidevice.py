@@ -184,7 +184,7 @@ def test_dryrun_machinery_small_mesh(arch, shape):
 import jax
 from repro.compat import cost_analysis, make_mesh
 from repro.launch.cells import build_cell, lower_cell
-from repro.launch.hlo_analysis import parse_collectives
+from repro.analysis import parse_collectives
 
 mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
 cell = build_cell('{arch}', '{shape}', mesh)

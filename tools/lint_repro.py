@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Repo-rule AST lint (stdlib only — no jax import, safe anywhere).
 
-Four rules the type system can't enforce:
+Six rules the type system can't enforce:
 
 R1  host-sync allowlist — ``np.asarray`` / ``jax.device_get`` /
     ``.block_until_ready()`` inside ``src/repro/runtime/`` must carry
@@ -21,6 +21,20 @@ R3  frozen configs — ``@dataclass`` classes named ``*Config`` must be
 
 R4  no mutable default arguments anywhere in ``src/repro``.
 
+R5  event-loop thread discipline — in ``runtime/server.py`` and
+    ``runtime/engine.py``, *synchronous* (driver-thread) code may only
+    interact with the asyncio loop via ``call_soon_threadsafe``; any
+    other loop method (``call_soon``, ``create_future``, ...) needs the
+    ``lint: allow-loop-call`` marker documenting why that code provably
+    runs on the loop thread (e.g. ``RequestStream.__init__``, which the
+    async submission path constructs).
+
+R6  no engine calls under an ingress lock — ``engine.* `` /
+    ``self.engine.*`` calls inside a ``with <...lock...>`` block need
+    the ``lint: allow-locked-engine-call`` marker: engine entry points
+    can block on the device, and holding the ingress lock across one
+    stalls every submitter.
+
 Exit 0 clean, 1 violations (listed one per line).
 """
 
@@ -34,9 +48,18 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 SRC = REPO / "src" / "repro"
 
 ALLOW_MARKER = "lint: allow-host-sync"
+ALLOW_LOOP_MARKER = "lint: allow-loop-call"
+ALLOW_LOCKED_MARKER = "lint: allow-locked-engine-call"
 JNP_FREE_MODULES = ("runtime/scheduler.py", "runtime/prefix_cache.py")
+THREAD_MODULES = ("runtime/server.py", "runtime/engine.py")
 
 _HOST_SYNC_ATTRS = {"device_get", "block_until_ready"}
+
+#: loop methods a driver thread must never call directly — everything
+#: except the one threadsafe entry point
+_LOOP_UNSAFE_ATTRS = {"call_soon", "call_later", "call_at", "create_task",
+                      "create_future", "run_until_complete", "run_forever",
+                      "stop", "close"}
 
 
 def _is_host_sync_call(node: ast.Call) -> str | None:
@@ -55,18 +78,19 @@ def _is_host_sync_call(node: ast.Call) -> str | None:
     return None
 
 
-def _has_marker(lines: list[str], node: ast.AST) -> bool:
+def _has_marker(lines: list[str], node: ast.AST,
+                marker: str = ALLOW_MARKER) -> bool:
     hi = getattr(node, "end_lineno", node.lineno)
     lo = node.lineno - 1                  # 0-based index of the call line
-    if any(ALLOW_MARKER in lines[i] for i in range(lo, min(hi, len(lines)))):
+    if any(marker in lines[i] for i in range(lo, min(hi, len(lines)))):
         return True
     # or on the line directly above (trailing marker on a sibling arg)
-    if lo > 0 and ALLOW_MARKER in lines[lo - 1]:
+    if lo > 0 and marker in lines[lo - 1]:
         return True
     # or anywhere in the contiguous comment block directly above
     i = lo - 1
     while i >= 0 and lines[i].lstrip().startswith("#"):
-        if ALLOW_MARKER in lines[i]:
+        if marker in lines[i]:
             return True
         i -= 1
     return False
@@ -89,6 +113,71 @@ def _dataclass_frozen(cls: ast.ClassDef) -> tuple[bool, bool]:
     return is_dc, frozen
 
 
+def _recv_name(func: ast.Attribute) -> str:
+    """Terminal name of a call receiver: ``self._loop`` -> '_loop'."""
+    recv = func.value
+    if isinstance(recv, ast.Attribute):
+        return recv.attr
+    if isinstance(recv, ast.Name):
+        return recv.id
+    return ""
+
+
+def _loop_call(node: ast.Call) -> str | None:
+    """'recv.method' when the call is a non-threadsafe loop method."""
+    f = node.func
+    if not isinstance(f, ast.Attribute) or f.attr not in _LOOP_UNSAFE_ATTRS:
+        return None
+    name = _recv_name(f)
+    return f"{name}.{f.attr}" if "loop" in name else None
+
+
+def _engine_call(node: ast.Call) -> str | None:
+    """'recv.method' when the call targets an engine attribute."""
+    f = node.func
+    if not isinstance(f, ast.Attribute):
+        return None
+    name = _recv_name(f)
+    return f"{name}.{f.attr}" if name in ("engine", "_engine") else None
+
+
+def _sync_scope_calls(tree: ast.AST) -> list[ast.Call]:
+    """Call nodes whose nearest enclosing function is synchronous.
+
+    Async functions run on the event loop and may use it freely; the
+    driver thread lives in plain ``def``s.  Module level is excluded
+    (import time, no loop exists yet).
+    """
+    out: list[ast.Call] = []
+
+    def visit(node: ast.AST, sync: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.AsyncFunctionDef):
+                visit(child, False)
+            elif isinstance(child, ast.FunctionDef):
+                visit(child, True)
+            else:
+                if sync and isinstance(child, ast.Call):
+                    out.append(child)
+                visit(child, sync)
+
+    visit(tree, False)
+    return out
+
+
+def _lock_withs(tree: ast.AST):
+    """``with``/``async with`` statements whose context mentions a lock."""
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.With, ast.AsyncWith)):
+            continue
+        names = {n.attr if isinstance(n, ast.Attribute) else n.id
+                 for item in node.items
+                 for n in ast.walk(item.context_expr)
+                 if isinstance(n, (ast.Attribute, ast.Name))}
+        if any("lock" in s.lower() or "mutex" in s.lower() for s in names):
+            yield node
+
+
 def _mutable_default(node: ast.expr) -> bool:
     if isinstance(node, (ast.List, ast.Dict, ast.Set)):
         return True
@@ -105,6 +194,27 @@ def lint_file(path: pathlib.Path) -> list[str]:
     out: list[str] = []
     in_runtime = rel.startswith("src/repro/runtime/")
     jnp_free = any(rel.endswith(m) for m in JNP_FREE_MODULES)
+    threaded = any(rel.endswith(m) for m in THREAD_MODULES)
+
+    if threaded:
+        for call in _sync_scope_calls(tree):
+            what = _loop_call(call)
+            if what and not _has_marker(lines, call, ALLOW_LOOP_MARKER):
+                out.append(
+                    f"{rel}:{call.lineno}: R5 {what}() from synchronous "
+                    f"(driver-thread) code — only call_soon_threadsafe may "
+                    f"cross threads; annotate '{ALLOW_LOOP_MARKER}' if this "
+                    f"provably runs on the loop thread")
+        for w in _lock_withs(tree):
+            for node in ast.walk(w):
+                what = _engine_call(node) if isinstance(node, ast.Call) \
+                    else None
+                if what and not _has_marker(lines, node, ALLOW_LOCKED_MARKER):
+                    out.append(
+                        f"{rel}:{node.lineno}: R6 {what}() while holding a "
+                        f"lock — engine entry points can block on the "
+                        f"device; annotate '{ALLOW_LOCKED_MARKER}' if the "
+                        f"call provably cannot block")
 
     for node in ast.walk(tree):
         if in_runtime and isinstance(node, ast.Call):
