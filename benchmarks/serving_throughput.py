@@ -113,12 +113,13 @@ def make_lockstep(model, params, run, max_len: int):
     return run_requests
 
 
-def _run_cfg(impl: str, paged_backend: str = "auto") -> RunConfig:
+def _run_cfg(impl: str, paged_backend: str = "auto",
+             kv_dtype: str = "f32") -> RunConfig:
     policy = (SoftmaxPolicy(impl=impl, precision="uint8")
               if impl != "exact" else SoftmaxPolicy())
     return RunConfig(dtype="float32", attention_backend="naive",
                      scan_layers=True, softmax_policy=policy,
-                     paged_backend=paged_backend)
+                     paged_backend=paged_backend, kv_dtype=kv_dtype)
 
 
 def _warm_engine(model, params, run, cache, n_slots, warm):
@@ -410,6 +411,80 @@ def bench_shared_prefix(seed: int = 0, impl: str = "rexp",
     }
 
 
+def bench_kv_int8(seed: int = 0, impl: str = "rexp",
+                  n_requests: int = 12, n_slots: int = 4) -> dict:
+    """Quantized KV pool: the f32 engine vs the int8 engine, one workload.
+
+    Records the two things `--kv-dtype int8` trades: pool bytes (int8
+    pages + f32 per-token scales vs f32 pages — the reduction the paged
+    kernels' streamed VMEM inherits) and accuracy (the greedy
+    token-mismatch rate vs the f32 engine on the same requests —
+    free-running, so one hairline argmax flip cascades for the rest of
+    that stream; the calibrated per-step budget lives in
+    ``tests/test_kv_quant.py``).  The int8 engine is additionally
+    asserted token-identical to int8 *lockstep* every round — the
+    quantized pool must not change serving semantics, only storage.
+    Both engines are built+warmed up front and timed over 3 rotated
+    rounds, best kept.
+    """
+    arch = ARCHS["qwen3-32b"].scaled_down(d_model=64, n_heads=4, vocab=128,
+                                          n_periods=2)
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = PagedCacheConfig(n_pages=64, page_size=8, max_pages_per_seq=10)
+    rng = np.random.default_rng(seed)
+    requests = make_requests(rng, n_requests, arch.vocab_size)
+    useful = sum(m for _, m in requests)
+    warm = [(p, 2) for p, _ in requests]
+
+    eng_f32 = _warm_engine(model, params, _run_cfg(impl), cache, n_slots,
+                           warm)
+    eng_int8 = ServingEngine(model, params,
+                             _run_cfg(impl, kv_dtype="int8"),
+                             EngineConfig(n_slots=n_slots, cache=cache))
+    eng_int8.run(warm)
+    lockstep_int8 = make_lockstep(model, params,
+                                  _run_cfg(impl, kv_dtype="int8"),
+                                  cache.max_context)
+    lock_out = lockstep_int8(requests, n_slots)
+
+    def pool_bytes(eng, leaf: str) -> int:
+        return sum(int(np.asarray(v).nbytes)
+                   for k, v in eng.pools[0].items() if leaf in k)
+
+    def check_round(_r, payloads):
+        for i in range(len(requests)):  # int8 engine ≡ int8 lockstep
+            np.testing.assert_array_equal(payloads["int8"][i].tokens,
+                                          lock_out[i])
+
+    res = time_rotated(
+        {"f32": lambda _r: _time_requests(eng_f32, requests),
+         "int8": lambda _r: _time_requests(eng_int8, requests)},
+        after_round=check_round)
+    t_f32, out_f32 = res["f32"]
+    t_int8, out_int8 = res["int8"]
+
+    mismatched = sum(int(np.sum(out_f32[i].tokens != out_int8[i].tokens))
+                     for i in range(len(requests)))
+    f32_bytes = pool_bytes(eng_f32, "pages")
+    int8_bytes = (pool_bytes(eng_int8, "pages")
+                  + pool_bytes(eng_int8, "scales"))
+    return {
+        "workload": {"n_requests": n_requests, "n_slots": n_slots,
+                     "seed": seed, "policy": impl},
+        "useful_tokens": useful,
+        "f32_s": t_f32,
+        "f32_tok_s": useful / t_f32,
+        "int8_s": t_int8,
+        "int8_tok_s": useful / t_int8,
+        "pool_bytes_f32_per_layer": f32_bytes,
+        "pool_bytes_int8_per_layer": int8_bytes,
+        "pool_bytes_reduction": int8_bytes / f32_bytes,
+        "token_mismatch_vs_f32": mismatched / useful,
+        "int8_engine_matches_int8_lockstep": True,  # asserted every round
+    }
+
+
 def write_json(n_requests: int, n_slots: int, seed: int) -> dict:
     """Sweep every policy and record tokens/s per driver in
     ``BENCH_serving.json`` (the cross-PR perf trajectory artifact).
@@ -433,6 +508,7 @@ def write_json(n_requests: int, n_slots: int, seed: int) -> dict:
         } for impl, r in results.items()},
         "long_prompt_mixed": bench_ttft(seed=seed),
         "shared_prefix": bench_shared_prefix(seed=seed),
+        "kv_int8": bench_kv_int8(seed=seed),
     })
 
 
@@ -480,6 +556,12 @@ def main() -> None:
           f"({p['prefill_hit_tokens']}/{p['prompt_tokens']} prompt tokens "
           f"served from shared pages, {p['pages_shared']} pages shared, "
           f"{p['cow_copies']} COW copies)")
+    q = bench_kv_int8()
+    print(f"serving_kv_int8,{q['int8_s'] * 1e6:.0f},"
+          f"{q['int8_tok_s']:.1f} tok/s vs {q['f32_tok_s']:.1f} f32 "
+          f"({q['pool_bytes_reduction']:.2f}x pool bytes, "
+          f"{q['token_mismatch_vs_f32']:.1%} tokens differ from f32, "
+          f"int8 engine ≡ int8 lockstep)")
 
 
 if __name__ == "__main__":

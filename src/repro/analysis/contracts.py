@@ -55,6 +55,7 @@ class ContractSpec:
     policy: str              # softmax impl traced ('rexp' | 'lut2d' | ...)
     min_donated: int = 0     # >= this many inputs aliased to outputs
     lut_int_clean: bool = False
+    int8_dequant_clean: bool = False   # int8→float only under dequant_scope
     forbid_host_callbacks: bool = True
     forbid_host_transfers: bool = True
     forbid_logits_output: bool = False   # no (…, V) rank>=2 outputs
@@ -112,6 +113,8 @@ def check_artifacts(spec: ContractSpec, jaxpr, compiled_text: str,
             v += jaxpr_lint.host_callback_eqns(jaxpr)
         if spec.lut_int_clean:
             v += [str(u) for u in jaxpr_lint.lut_upcast_violations(jaxpr)]
+        if spec.int8_dequant_clean:
+            v += [str(u) for u in jaxpr_lint.int8_upcast_violations(jaxpr)]
         if spec.forbid_logits_output:
             v += jaxpr_lint.logits_escapes(jaxpr, vocab)
     stats = hlo_guard.parse_collectives(compiled_text)
@@ -126,7 +129,8 @@ def check_artifacts(spec: ContractSpec, jaxpr, compiled_text: str,
 # ---------------------------------------------------------------------------
 
 
-def _build_engine(*, pipelined: bool, impl: str, mesh=None, kvh=None):
+def _build_engine(*, pipelined: bool, impl: str, mesh=None, kvh=None,
+                  kv_dtype: str = "f32"):
     from repro.configs import ARCHS, RunConfig
     from repro.core.policies import SoftmaxPolicy
     from repro.models import build_model
@@ -140,7 +144,8 @@ def _build_engine(*, pipelined: bool, impl: str, mesh=None, kvh=None):
     pol = (SoftmaxPolicy(impl=impl, precision="uint8")
            if impl != "exact" else SoftmaxPolicy())
     run = RunConfig(dtype="float32", attention_backend="naive",
-                    scan_layers=True, softmax_policy=pol)
+                    scan_layers=True, softmax_policy=pol,
+                    kv_dtype=kv_dtype)
     cfg = EngineConfig(n_slots=_N_SLOTS, cache=PagedCacheConfig(**_CACHE),
                        mesh=mesh)
     cls = PipelinedEngine if pipelined else ServingEngine
@@ -259,6 +264,23 @@ def single_device_contracts() -> list[ContractResult]:
             notes="fused sampling: token vectors out, never (…, V) logits "
                   "(PR 7 hot-path gate, static form)")
         out.append(check_artifacts(spec, *_step_artifacts(pipe, step)))
+
+    _, quant = _build_engine(pipelined=False, impl="rexp", kv_dtype="int8")
+    donated = _pool_leaves(quant)   # 4 leaves/period: pages + scale pools
+    for step in ("decode", "prefill-chunk"):
+        spec = ContractSpec(
+            name=f"single/{step}/rexp-int8", topology="single", step=step,
+            policy="rexp", min_donated=donated, lut_int_clean=True,
+            int8_dequant_clean=True, max_collective_tensor_bytes=0,
+            notes="quantized KV pool: int8 pages leave storage dtype only "
+                  "inside dequant_scope; scale leaves donated with the pool")
+        out.append(check_artifacts(spec, *_step_artifacts(quant, step)))
+    spec = ContractSpec(
+        name="single/cow-copy/int8", topology="single", step="cow-copy",
+        policy="rexp", min_donated=donated, int8_dequant_clean=True,
+        max_collective_tensor_bytes=0,
+        notes="COW duplicate moves page + scale leaves atomically in-place")
+    out.append(check_artifacts(spec, *_step_artifacts(quant, "cow-copy")))
     return out
 
 

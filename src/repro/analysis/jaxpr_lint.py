@@ -114,9 +114,11 @@ class UpcastViolation:
     dst_dtype: str
     shape: tuple
     name_stack: str
+    kind: str = "lut"         # 'lut' (tainted Σ path) | 'int8' (KV pool)
 
     def __str__(self) -> str:
-        return (f"lut-upcast: {self.primitive} {self.src_dtype}{self.shape} "
+        return (f"{self.kind}-upcast: {self.primitive} "
+                f"{self.src_dtype}{self.shape} "
                 f"-> {self.dst_dtype} outside dequant scope "
                 f"(scopes: {self.name_stack or '<root>'})")
 
@@ -188,6 +190,34 @@ def lut_upcast_violations(jx) -> list[UpcastViolation]:
     while walk(top):
         pass
     return list(found.values())
+
+
+def int8_upcast_violations(jx) -> list[UpcastViolation]:
+    """Untagged int8→float converts anywhere in the program.
+
+    The quantized KV pool stores pages as int8; the only sanctioned
+    int8→float exits are the per-page dequants inside the kernels'
+    ``dequant_scope()``.  Unlike :func:`lut_upcast_violations` this is
+    not a taint analysis — *every* int8 source is a root, because int8
+    exists in the step program only as quantized KV storage.  The src
+    dtype is matched exactly (int8, not uint8/int16) so the LUT table
+    reads and σ_int accumulators stay out of scope.
+    """
+    found = []
+    for eqn in iter_eqns(jx):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = eqn.invars[0].aval
+        dst = eqn.outvars[0].aval
+        if (str(src.dtype) == "int8"
+                and jnp.issubdtype(dst.dtype, jnp.floating)):
+            scopes = eqn_scopes(eqn)
+            if LUT_DEQUANT_TAG not in scopes:
+                found.append(UpcastViolation(
+                    primitive=eqn.primitive.name, src_dtype=str(src.dtype),
+                    dst_dtype=str(dst.dtype), shape=tuple(src.shape),
+                    name_stack=scopes, kind="int8"))
+    return found
 
 
 def host_callback_eqns(jx) -> list[str]:

@@ -167,13 +167,21 @@ GEOMETRIES: dict[str, dict] = {
 
 
 def kernel_registry(geom: Mapping) -> dict[str, KernelSpec]:
-    """All five kernel modules' declarations at one dispatch geometry."""
+    """All kernel modules' declarations at one dispatch geometry.
+
+    Modules exporting ``kernel_spec_int8`` (the paged kernels' quantized
+    variants — int8 pages + f32 scale blocks) contribute that
+    declaration too, so the guard proves the halved streamed VMEM and
+    the scale-operand pairing on the same grids as the f32 kernels.
+    """
     from repro.kernels.lut_attention import (lut_attention, paged_decode,
                                              paged_prefill, sharded_decode,
                                              sharded_paged)
-    specs = [m.kernel_spec(geom) for m in (lut_attention, paged_decode,
-                                           paged_prefill, sharded_decode,
-                                           sharded_paged)]
+    mods = (lut_attention, paged_decode, paged_prefill, sharded_decode,
+            sharded_paged)
+    specs = [m.kernel_spec(geom) for m in mods]
+    specs += [m.kernel_spec_int8(geom) for m in mods
+              if hasattr(m, "kernel_spec_int8")]
     return {s.name: s for s in specs}
 
 
@@ -286,6 +294,30 @@ def _input_range_violations(kname: str, ps: PassSpec) -> list[str]:
     return out
 
 
+def _quant_scale_violations(kname: str, ps: PassSpec) -> list[str]:
+    """Every int8 input operand must stream a float32 scale beside it.
+
+    The quantized pools are useless without their per-token scales: a
+    pass that declares an int8 ``<x>_pages`` operand but no float32
+    ``<x>_scales`` operand would dequantize garbage (or skip dequant
+    entirely).  Pairing is by name — the convention the kernels and the
+    pool contract (``paged_cache.pool_leaf_specs``) share.
+    """
+    out: list[str] = []
+    scales = {op.name for op in ps.inputs
+              if op.dtype == "float32" and "scale" in op.name}
+    for op in ps.inputs:
+        if op.dtype != "int8":
+            continue
+        want = op.name.split("_")[0] + "_scales"
+        if want not in scales:
+            out.append(
+                f"{kname}/{ps.name}: int8 operand {op.name!r} has no "
+                f"float32 scale operand {want!r} — quantized pages must "
+                f"stream their per-token scales through the same pass")
+    return out
+
+
 def _clamp_violations(kname: str, probe: ClampProbe) -> list[str]:
     """Numerically probe a shard_map page-id clamp at slab boundaries."""
     lo, slab, n = probe.lo, probe.slab, probe.n_pages
@@ -395,6 +427,7 @@ def check_kernel(ks: KernelSpec, limit: int | None = None) -> tuple[list, dict]:
                     f"(= VMEM_BUDGET × (1 − headroom))")
             violations += _coverage_violations(ks.name, ps)
             violations += _input_range_violations(ks.name, ps)
+            violations += _quant_scale_violations(ks.name, ps)
         info["vmem_bytes"] = max(passes.values()) if passes else 0
         info["passes"] = passes
     elif ks.kind == "shard_map":

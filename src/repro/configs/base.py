@@ -191,6 +191,10 @@ class RunConfig:
     paged_backend: str = "auto"                    # paged attention (decode +
                                                    # prefill chunks):
                                                    # auto | pallas | dense
+    kv_dtype: str = "f32"                          # KV page-pool storage:
+                                                   # f32 (pool dtype follows
+                                                   # `dtype`) | int8 (per-row
+                                                   # scales, in-kernel dequant)
     scan_layers: bool = True                       # scan periods (real prog)
     remat: bool = True
     microbatch: int = 1                            # grad-accumulation steps

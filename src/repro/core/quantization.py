@@ -38,14 +38,63 @@ def fake_quant_symmetric(x: Array, qmax: float = INT8_QMAX) -> Array:
 
 
 def fake_quant_affine(x: Array, qmax: float = 255.0) -> Array:
-    """Per-tensor affine fake quantization (dynamic activation scheme)."""
+    """Per-tensor affine fake quantization (dynamic activation scheme).
+
+    The range is extended to include 0 (torch ``choose_qparams``
+    convention) so zero stays exactly representable, and the zero-point
+    is clamped onto the integer grid ``[0, qmax]`` — without the clamp an
+    all-positive (or all-negative) tensor produces a zero-point off the
+    grid and the round trip drifts by up to a full quantization step.
+    """
     x = x.astype(jnp.float32)
-    lo = jnp.min(x)
-    hi = jnp.max(x)
+    lo = jnp.minimum(jnp.min(x), 0.0)
+    hi = jnp.maximum(jnp.max(x), 0.0)
     scale = jnp.maximum((hi - lo) / qmax, jnp.finfo(jnp.float32).tiny)
-    zp = jnp.round(-lo / scale)
+    zp = jnp.clip(jnp.round(-lo / scale), 0.0, qmax)
     q = jnp.clip(jnp.round(x / scale) + zp, 0.0, qmax)
     return (q - zp) * scale
+
+
+# ---------------------------------------------------------------------------
+# The int8 KV-pool rounding convention (shared with runtime/paged_cache.py
+# and the paged kernels — there must be exactly ONE quantize/dequantize
+# pair so lockstep fake-quant and the engine's real int8 pool agree
+# bit-for-bit)
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows(x: Array, qmax: float = INT8_QMAX) -> tuple[Array, Array]:
+    """Symmetric int8 quantization per row (amax over the LAST axis).
+
+    Returns ``(q, scale)`` with ``q`` int8 of ``x.shape`` and ``scale``
+    f32 of ``x.shape[:-1]``.  ``scale`` is floored at f32-tiny so an
+    all-zero row round-trips to exact zeros instead of NaN.
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax / qmax, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rows(q: Array, scale: Array) -> Array:
+    """Inverse of :func:`quantize_rows`: ``q · scale`` back to f32.
+
+    The int8→f32 upcast is tagged with ``dequant_scope`` so the jaxpr
+    lint recognizes it as the sanctioned exit of the quantized datapath
+    (the same convention the LUT integer-Σ path uses).
+    """
+    from repro.kernels.common import dequant_scope  # deferred: layering
+
+    with dequant_scope():
+        return q.astype(jnp.float32) * scale[..., None]
+
+
+def fake_quant_rows(x: Array, qmax: float = INT8_QMAX) -> Array:
+    """``dequantize_rows(*quantize_rows(x))`` — the lockstep-side view of
+    the engine's int8 KV pool, numerically identical by construction."""
+    q, scale = quantize_rows(x, qmax)
+    return dequantize_rows(q, scale)
 
 
 def _is_linear_weight(path: tuple, leaf: Array) -> bool:

@@ -30,6 +30,11 @@ tensor-parallel rows (``lut_attention/sharded_paged.py``): the 'heads'
 regime (KVH % tp == 0) runs each head group locally off a
 KV-head-sharded pool with no attention collectives, and the 'pages'
 regime shards the pool's physical-page axis and reduces only (B, H, 1)
-pmax/psum partials — never gathered KV.  All paths share one integer
-LUT pipeline and produce the same tokens.
+pmax/psum partials — never gathered KV.  With ``kv_dtype=int8`` every
+row reads int8 pages plus f32 per-token × KV-head scales (quantized
+rows of the same matrix): the fused kernels stream scale blocks beside
+their pages and dequantize in VMEM, the dense/mesh paths dequantize the
+gathered view, and under a mesh the scales shard with their pages in
+both regimes.  All paths share one integer LUT pipeline and produce the
+same tokens.
 """

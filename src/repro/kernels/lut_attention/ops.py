@@ -37,6 +37,18 @@ asserts the three stay in sync):
                                pmax + integer-Σ psum — only (B, H, 1)
                                partials on the wire, never gathered KV
 
+    and two quantized rows (``kv_dtype=int8``; the engine passes the
+    pool's f32 per-token × KV-head scale arrays alongside the pages —
+    every path dequantizes under ``dequant_scope``, the LUT integer-Σ
+    pipeline itself is untouched):
+
+    ``int8`` + fused kernel    int8 variant of the same 3-pass kernel:
+                               scale blocks stream beside their pages,
+                               dequant in VMEM (`kernel_spec_int8`)
+    ``int8`` + dense / mesh    gathered view dequantized before the
+                               dense reference; under a mesh the scales
+                               shard with their pages in both regimes
+
 The fused kernels (``paged_decode.py`` / ``paged_prefill.py``) stream
 K/V pages straight from the pool through scalar-prefetched block tables
 — no contiguous gather; their scalar-prefetch grid spec is
@@ -485,6 +497,8 @@ def lut_attention_paged_prefill(
     q_chunk: int = 512,
     k_chunk: int = 1024,
     mesh=None,
+    k_scales: Array | None = None,  # (num_pages, page_size, KVH) f32 —
+    v_scales: Array | None = None,  # int8 pool dequant scales (or None)
 ) -> Array:
     """Prefill-chunk attention reading prior keys through the block
     tables — the chunk's K/V were already scattered into the pool, so
@@ -515,7 +529,8 @@ def lut_attention_paged_prefill(
         from repro.kernels.lut_attention import sharded_paged
         return sharded_paged.paged_attention_sharded(
             q, k_pages, v_pages, block_tables, kv_lens, policy, mesh=mesh,
-            regime=regime, q_start=q_start, scale=scale)
+            regime=regime, q_start=q_start, scale=scale,
+            k_scales=k_scales, v_scales=v_scales)
     resolved = resolve_paged_prefill_backend(backend)
     if resolved.startswith("pallas"):
         return paged_prefill_attention(
@@ -523,9 +538,14 @@ def lut_attention_paged_prefill(
             _tables_for(policy), method=policy.impl, scale=scale,
             index_mode=policy.index_mode,
             lookup="gather" if policy.lookup_impl == "gather" else "select",
-            interpret=resolved == "pallas_interpret")
-    k_seq = gather_pages(k_pages, block_tables)
-    v_seq = gather_pages(v_pages, block_tables)
+            interpret=resolved == "pallas_interpret",
+            k_scales=k_scales, v_scales=v_scales)
+    if k_scales is not None:
+        k_seq, v_seq = _gather_dequant(k_pages, v_pages, block_tables,
+                                       k_scales, v_scales)
+    else:
+        k_seq = gather_pages(k_pages, block_tables)
+        v_seq = gather_pages(v_pages, block_tables)
     if resolved == "blocked":
         return lut_attention_blocked(q, k_seq, v_seq, policy, causal=True,
                                      scale=scale, kv_len=kv_lens,
@@ -576,6 +596,29 @@ def gather_pages(pages: Array, block_tables: Array) -> Array:
     return g.transpose(0, 3, 1, 2, 4).reshape(b, kvh, mp * ps, dh)
 
 
+def gather_page_scales(scales: Array, block_tables: Array) -> Array:
+    """(P, ps, KVH) scale pool + (B, mp) table → (B, KVH, mp·ps) view.
+
+    Row-aligned with :func:`gather_pages`: scale [b, n, t] dequantizes
+    token row t of the gathered int8 K (or V) view.  Dense-path only,
+    like the page gather itself.
+    """
+    b, mp = block_tables.shape
+    ps, kvh = scales.shape[1], scales.shape[2]
+    g = scales[block_tables]                    # (B, mp, ps, KVH)
+    return g.transpose(0, 3, 1, 2).reshape(b, kvh, mp * ps)
+
+
+def _gather_dequant(k_pages, v_pages, block_tables, k_scales, v_scales):
+    """Dense-path int8 pool → dequantized (B, KVH, mp·ps, Dh) f32 views."""
+    from repro.core.quantization import dequantize_rows
+    k_seq = dequantize_rows(gather_pages(k_pages, block_tables),
+                            gather_page_scales(k_scales, block_tables))
+    v_seq = dequantize_rows(gather_pages(v_pages, block_tables),
+                            gather_page_scales(v_scales, block_tables))
+    return k_seq, v_seq
+
+
 def resolve_paged_backend(backend: str = "auto") -> str:
     """Resolve the paged-decode dispatch knob to an executable path.
 
@@ -606,6 +649,8 @@ def lut_attention_paged_decode(
     scale: float | None = None,
     backend: str = "auto",  # 'auto' | 'pallas' | 'dense'
     mesh=None,
+    k_scales: Array | None = None,  # (num_pages, page_size, KVH) f32 —
+    v_scales: Array | None = None,  # int8 pool dequant scales (or None)
 ) -> Array:
     """Decode attention straight off the paged KV pool.
 
@@ -627,15 +672,20 @@ def lut_attention_paged_decode(
         from repro.kernels.lut_attention import sharded_paged
         return sharded_paged.paged_attention_sharded(
             q, k_pages, v_pages, block_tables, kv_lens, policy, mesh=mesh,
-            regime=regime, scale=scale)
+            regime=regime, scale=scale, k_scales=k_scales, v_scales=v_scales)
     resolved = resolve_paged_backend(backend)
     if resolved.startswith("pallas"):
         return paged_decode_attention(
             q, k_pages, v_pages, block_tables, kv_lens, _tables_for(policy),
             method=policy.impl, scale=scale, index_mode=policy.index_mode,
             lookup="gather" if policy.lookup_impl == "gather" else "select",
-            interpret=resolved == "pallas_interpret")
-    k_seq = gather_pages(k_pages, block_tables)
-    v_seq = gather_pages(v_pages, block_tables)
+            interpret=resolved == "pallas_interpret",
+            k_scales=k_scales, v_scales=v_scales)
+    if k_scales is not None:
+        k_seq, v_seq = _gather_dequant(k_pages, v_pages, block_tables,
+                                       k_scales, v_scales)
+    else:
+        k_seq = gather_pages(k_pages, block_tables)
+        v_seq = gather_pages(v_pages, block_tables)
     return lut_attention_decode_varlen(q, k_seq, v_seq, policy, kv_lens,
                                        scale=scale)

@@ -66,7 +66,22 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 
-def _page_logits(q_ref, k_ref, kl_ref, scale, page_size):
+def _page_rows(x_ref, sc_ref):
+    """Page block (1, ps, 1, Dh) → (ps, Dh) f32 token rows.
+
+    ``sc_ref`` is the page's (1, ps, 1) f32 scale block when the pool is
+    int8 (per-token × KV-head symmetric quantization) — the int8→f32
+    upcast then happens here, inside ``dequant_scope`` (the sanctioned
+    exit the jaxpr lint checks for), and nowhere else in the kernel.
+    """
+    if sc_ref is None:
+        return x_ref[0, :, 0, :].astype(jnp.float32)
+    with dequant_scope():  # int8 page rows × per-token scales
+        return x_ref[0, :, 0, :].astype(jnp.float32) \
+            * sc_ref[0, :, 0][:, None]
+
+
+def _page_logits(q_ref, k_ref, kl_ref, scale, page_size, ks_ref=None):
     """(G, ps) f32 logits of this (slot, kv-head, page) cell, tail-masked.
 
     Key positions are logical: page ``p`` of a slot covers absolute
@@ -76,7 +91,7 @@ def _page_logits(q_ref, k_ref, kl_ref, scale, page_size):
     b = pl.program_id(0)
     p = pl.program_id(2)
     q = q_ref[0, 0].astype(jnp.float32)          # (G, Dh)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (ps, Dh)
+    k = _page_rows(k_ref, ks_ref)                # (ps, Dh)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -88,14 +103,24 @@ def _page_logits(q_ref, k_ref, kl_ref, scale, page_size):
 # ---------------------------------------------------------------------------
 
 
-def _pg_rowmax_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, *, scale,
-                      page_size):
+def _accum_rowmax(s, m_ref):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
 
-    s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
     m_ref[0, 0] = jnp.maximum(m_ref[0, 0], jnp.max(s, axis=-1))
+
+
+def _pg_rowmax_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, *, scale,
+                      page_size):
+    _accum_rowmax(_page_logits(q_ref, k_ref, kl_ref, scale, page_size),
+                  m_ref)
+
+
+def _pg_rowmax_kernel_int8(bt_ref, kl_ref, q_ref, k_ref, ks_ref, m_ref, *,
+                           scale, page_size):
+    _accum_rowmax(_page_logits(q_ref, k_ref, kl_ref, scale, page_size,
+                               ks_ref=ks_ref), m_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -103,13 +128,12 @@ def _pg_rowmax_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, *, scale,
 # ---------------------------------------------------------------------------
 
 
-def _pg_sum_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, lut_ref, s_ref, *,
-                   scale, page_size, method, exp_step, index_mode, lookup):
+def _accum_sum(s, m_ref, lut_ref, s_ref, method, exp_step, index_mode,
+               lookup):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         s_ref[...] = jnp.zeros_like(s_ref)
 
-    s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
     m = m_ref[0, 0]
     m = jnp.where(jnp.isfinite(m), m, 0.0)
     e = policy_e_terms(s, m, lut_ref[0, :], method, exp_step, index_mode,
@@ -118,15 +142,28 @@ def _pg_sum_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, lut_ref, s_ref, *,
         s_ref[0, 0] += jnp.sum(e.astype(jnp.float32), axis=-1)
 
 
+def _pg_sum_kernel(bt_ref, kl_ref, q_ref, k_ref, m_ref, lut_ref, s_ref, *,
+                   scale, page_size, method, exp_step, index_mode, lookup):
+    _accum_sum(_page_logits(q_ref, k_ref, kl_ref, scale, page_size),
+               m_ref, lut_ref, s_ref, method, exp_step, index_mode, lookup)
+
+
+def _pg_sum_kernel_int8(bt_ref, kl_ref, q_ref, k_ref, ks_ref, m_ref, lut_ref,
+                        s_ref, *, scale, page_size, method, exp_step,
+                        index_mode, lookup):
+    _accum_sum(_page_logits(q_ref, k_ref, kl_ref, scale, page_size,
+                            ks_ref=ks_ref),
+               m_ref, lut_ref, s_ref, method, exp_step, index_mode, lookup)
+
+
 # ---------------------------------------------------------------------------
 # Pass 3 — per-element σ · V (faithful requantization, online across pages)
 # ---------------------------------------------------------------------------
 
 
-def _pg_weight_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, m_ref, s_ref,
-                      lut_main_ref, lut_aux_ref, o_ref, *, scale, page_size,
-                      method, qmax, exp_step, scale_ex, scale_sum, index_mode,
-                      lookup):
+def _accum_weight(s, v, m_ref, s_ref, lut_main_ref, lut_aux_ref, o_ref,
+                  method, qmax, exp_step, scale_ex, scale_sum, index_mode,
+                  lookup):
     """Accumulate out += σ(s, m, S) @ V_page with the policy's per-element
     weights — REXP re-quantizes σ_int per element (Algorithm 1 line 11),
     2D-LUT reads LUT_σ[i(e), j(S)] (Algorithm 2), exact divides by S."""
@@ -134,7 +171,6 @@ def _pg_weight_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, m_ref, s_ref,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    s = _page_logits(q_ref, k_ref, kl_ref, scale, page_size)
     m = m_ref[0, 0]
     m = jnp.where(jnp.isfinite(m), m, 0.0)
     e = policy_e_terms(s, m, lut_main_ref[0, :], method, exp_step,
@@ -152,10 +188,30 @@ def _pg_weight_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, m_ref, s_ref,
         with dequant_scope():  # σ_int/qmax: the sanctioned exit
             w = sigma_int.astype(jnp.float32) * inv_scale(qmax)
 
-    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dh)
     o_ref[0, 0] += jax.lax.dot_general(
         w.astype(jnp.float32), v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
+
+
+def _pg_weight_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, m_ref, s_ref,
+                      lut_main_ref, lut_aux_ref, o_ref, *, scale, page_size,
+                      method, qmax, exp_step, scale_ex, scale_sum, index_mode,
+                      lookup):
+    _accum_weight(_page_logits(q_ref, k_ref, kl_ref, scale, page_size),
+                  _page_rows(v_ref, None), m_ref, s_ref, lut_main_ref,
+                  lut_aux_ref, o_ref, method, qmax, exp_step, scale_ex,
+                  scale_sum, index_mode, lookup)
+
+
+def _pg_weight_kernel_int8(bt_ref, kl_ref, q_ref, k_ref, ks_ref, v_ref,
+                           vs_ref, m_ref, s_ref, lut_main_ref, lut_aux_ref,
+                           o_ref, *, scale, page_size, method, qmax, exp_step,
+                           scale_ex, scale_sum, index_mode, lookup):
+    _accum_weight(_page_logits(q_ref, k_ref, kl_ref, scale, page_size,
+                               ks_ref=ks_ref),
+                  _page_rows(v_ref, vs_ref), m_ref, s_ref, lut_main_ref,
+                  lut_aux_ref, o_ref, method, qmax, exp_step, scale_ex,
+                  scale_sum, index_mode, lookup)
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +225,14 @@ def _pool_spec(page_size, dh):
     return pl.BlockSpec(
         (1, page_size, 1, dh),
         lambda b, h, p, bt_ref, kl_ref: (bt_ref[b, p], 0, h, 0))
+
+
+def _scale_spec(page_size):
+    """The int8 pool's per-page scale block — rides the same
+    scalar-prefetched block-table indirection as its page."""
+    return pl.BlockSpec(
+        (1, page_size, 1),
+        lambda b, h, p, bt_ref, kl_ref: (bt_ref[b, p], 0, h))
 
 
 def _lut_spec(arr):
@@ -190,16 +254,7 @@ def _grid_specs(g, dh, page_size):
     return q_spec, kv_spec, acc_spec, o_spec
 
 
-def kernel_spec(geom):
-    """Static declaration for :mod:`repro.analysis.kernel_guard`.
-
-    Uses the launcher's own ``_grid_specs`` / ``_pool_spec``; the
-    scalar-prefetch probe arrays exercise both extremes of the declared
-    block-table domain ``[0, n_pages)`` (0 is the null-page placeholder,
-    the allocator issues ids in ``[1, n_pages)``), so the in-range check
-    is a clamp proof for the pool indirection.  Table operands use the
-    worst-case (int16 2D-LUT) shapes.
-    """
+def _build_kernel_spec(geom, quantized):
     import numpy as np
 
     from repro.analysis.kernel_guard import KernelSpec, Operand, PassSpec
@@ -221,11 +276,19 @@ def kernel_spec(geom):
     # aux slot carries α (rexp, (1,16)) or σ (lut2d); σ (11,60) is worst
     lut_aux = l2d.lut_sigma
 
+    page_dtype = "int8" if quantized else "float32"
     q = Operand("q", (b, kvh, g, dh), q_spec)
     kv = Operand("k_pages", (n_pages, page_size, kvh, dh), kv_spec,
-                 table_indexed=True, index_domain=(0, n_pages))
+                 page_dtype, table_indexed=True, index_domain=(0, n_pages))
     vv = Operand("v_pages", (n_pages, page_size, kvh, dh), kv_spec,
+                 page_dtype, table_indexed=True, index_domain=(0, n_pages))
+    sc = _scale_spec(page_size)
+    ks = Operand("k_scales", (n_pages, page_size, kvh), sc,
                  table_indexed=True, index_domain=(0, n_pages))
+    vs = Operand("v_scales", (n_pages, page_size, kvh), sc,
+                 table_indexed=True, index_domain=(0, n_pages))
+    kk = (kv, ks) if quantized else (kv,)
+    vvv = (vv, vs) if quantized else (vv,)
     m = Operand("m", (b, kvh, g), acc_spec)
     s = Operand("s_sum", (b, kvh, g), acc_spec)
     o = Operand("out", (b, kvh, g, dh), o_spec)
@@ -233,18 +296,49 @@ def kernel_spec(geom):
     t_aux = Operand("lut_aux", lut_aux.shape, _lut_spec(lut_aux), "int32")
 
     passes = (
-        PassSpec("rowmax", grid, (q, kv), (m,), scalar_prefetch=prefetch),
-        PassSpec("sum", grid, (q, kv, m, t_main), (s,),
+        PassSpec("rowmax", grid, (q,) + kk, (m,), scalar_prefetch=prefetch),
+        PassSpec("sum", grid, (q,) + kk + (m, t_main), (s,),
                  scalar_prefetch=prefetch, sigma_acc=True,
                  acc_dtype="float32",
                  notes="integer Σ accumulated f32-exact in the resident ref"),
-        PassSpec("weight", grid, (q, kv, vv, m, s, t_main, t_aux), (o,),
-                 scalar_prefetch=prefetch),
+        PassSpec("weight", grid, (q,) + kk + vvv + (m, s, t_main, t_aux),
+                 (o,), scalar_prefetch=prefetch),
     )
+    if quantized:
+        return KernelSpec(
+            name="paged_decode_int8", module=__name__, kind="pallas",
+            passes=passes,
+            notes="int8 pool variant: pages stream as int8 with per-token "
+                  "f32 scale blocks riding the same block-table "
+                  "indirection; dequant in VMEM under dequant_scope")
     return KernelSpec(
         name="paged_decode", module=__name__, kind="pallas", passes=passes,
         notes="streams pages from the pool via scalar-prefetched block "
               "tables; one page DMA per grid step")
+
+
+def kernel_spec(geom):
+    """Static declaration for :mod:`repro.analysis.kernel_guard`.
+
+    Uses the launcher's own ``_grid_specs`` / ``_pool_spec``; the
+    scalar-prefetch probe arrays exercise both extremes of the declared
+    block-table domain ``[0, n_pages)`` (0 is the null-page placeholder,
+    the allocator issues ids in ``[1, n_pages)``), so the in-range check
+    is a clamp proof for the pool indirection.  Table operands use the
+    worst-case (int16 2D-LUT) shapes.
+    """
+    return _build_kernel_spec(geom, quantized=False)
+
+
+def kernel_spec_int8(geom):
+    """The int8-pool variant's declaration (``paged_decode_int8``).
+
+    Same grid and accumulators as :func:`kernel_spec`; the K/V page
+    operands are int8 and each carries a per-token f32 scale operand
+    read through the identical block-table indirection — the guard
+    proves the streamed working set shrinks to ~¼ of the f32 pages.
+    """
+    return _build_kernel_spec(geom, quantized=True)
 
 
 def paged_decode_attention(
@@ -260,6 +354,8 @@ def paged_decode_attention(
     index_mode: str = "round",
     lookup: str = "select",
     interpret: bool | None = None,
+    k_scales: Array | None = None,  # (num_pages, page_size, KVH) f32
+    v_scales: Array | None = None,
 ) -> Array:
     """Fused paged-decode attention; returns (B, H, 1, Dh) f32.
 
@@ -268,6 +364,13 @@ def paged_decode_attention(
     interpreter run on real hardware, and CPU callers never get a
     lowering error.
 
+    ``k_scales``/``v_scales`` (both or neither) select the int8-pool
+    variant: the pages are int8, each token row carrying one symmetric
+    f32 scale per KV head; the scale blocks ride the same block-table
+    indirection and the rows are dequantized in VMEM (``_page_rows``)
+    before the identical 3-pass pipeline — halved page traffic, same
+    integer LUT semantics.
+
     Numerics match ``ops.lut_attention_decode_varlen`` on the gathered
     view: identical integer pipeline (bins, e_int, Σ, σ_int); the final
     f32 V-contraction accumulates per page, so outputs agree to f32
@@ -275,6 +378,9 @@ def paged_decode_attention(
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    quantized = k_scales is not None
+    assert quantized == (v_scales is not None), \
+        "int8 pool needs both k_scales and v_scales"
     b, h, lq, dh = q.shape
     assert lq == 1, f"paged decode takes single-token queries, got Lq={lq}"
     num_pages, page_size, kvh, _ = k_pages.shape
@@ -299,37 +405,46 @@ def paged_decode_attention(
      scale_sum) = policy_kernel_tables(method, tables)
 
     geom = dict(scale=scale, page_size=page_size)
+    sc_spec = _scale_spec(page_size)
+    # the int8 variants interleave each page's scale block right after it
+    k_in = [kv_spec, sc_spec] if quantized else [kv_spec]
+    k_ops = (k_pages, k_scales) if quantized else (k_pages,)
+    v_in = [kv_spec, sc_spec] if quantized else [kv_spec]
+    v_ops = (v_pages, v_scales) if quantized else (v_pages,)
+    rowmax_k = _pg_rowmax_kernel_int8 if quantized else _pg_rowmax_kernel
+    sum_k = _pg_sum_kernel_int8 if quantized else _pg_sum_kernel
+    weight_k = _pg_weight_kernel_int8 if quantized else _pg_weight_kernel
 
     # Pass 1: global row max, accumulated online over the page chunks.
     m = pl.pallas_call(
-        functools.partial(_pg_rowmax_kernel, **geom),
-        grid_spec=spec([q_spec, kv_spec], acc_spec),
+        functools.partial(rowmax_k, **geom),
+        grid_spec=spec([q_spec] + k_in, acc_spec),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
         interpret=interpret,
-    )(block_tables, kv_lens, qg, k_pages)
+    )(block_tables, kv_lens, qg, *k_ops)
 
     # Pass 2: global Σ of the policy's numerators.
     s_sum = pl.pallas_call(
-        functools.partial(_pg_sum_kernel, method=method, exp_step=exp_step,
+        functools.partial(sum_k, method=method, exp_step=exp_step,
                           index_mode=index_mode, lookup=lookup, **geom),
-        grid_spec=spec([q_spec, kv_spec, acc_spec, _lut_spec(lut_main)],
+        grid_spec=spec([q_spec] + k_in + [acc_spec, _lut_spec(lut_main)],
                        acc_spec),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g), jnp.float32),
         interpret=interpret,
-    )(block_tables, kv_lens, qg, k_pages, m, lut_main)
+    )(block_tables, kv_lens, qg, *k_ops, m, lut_main)
 
     # Pass 3: per-element σ · V, accumulated page by page.
     out = pl.pallas_call(
-        functools.partial(_pg_weight_kernel, method=method, qmax=qmax,
+        functools.partial(weight_k, method=method, qmax=qmax,
                           exp_step=exp_step, scale_ex=scale_ex,
                           scale_sum=scale_sum, index_mode=index_mode,
                           lookup=lookup, **geom),
-        grid_spec=spec([q_spec, kv_spec, kv_spec, acc_spec, acc_spec,
+        grid_spec=spec([q_spec] + k_in + v_in + [acc_spec, acc_spec,
                         _lut_spec(lut_main), _lut_spec(lut_aux)],
                        o_spec),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), jnp.float32),
         interpret=interpret,
-    )(block_tables, kv_lens, qg, k_pages, v_pages, m, s_sum, lut_main,
+    )(block_tables, kv_lens, qg, *k_ops, *v_ops, m, s_sum, lut_main,
       lut_aux)
 
     return out.reshape(b, h, 1, dh)

@@ -63,6 +63,7 @@ from repro.core.lut_softmax import inv_scale
 from repro.kernels.common import (NEG_INF, dequant_scope, lut2d_sigma_int,
                                   policy_e_terms, policy_kernel_tables,
                                   rexp_sigma)
+from repro.kernels.lut_attention.paged_decode import _page_rows
 
 Array = jax.Array
 
@@ -72,7 +73,8 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 
-def _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size):
+def _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size,
+                  ks_ref=None):
     """(G, C, ps) f32 logits of this (slot, kv-head, page) cell, masked.
 
     Key positions are logical: page ``p`` of a slot covers absolute
@@ -80,11 +82,13 @@ def _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size):
     row ``i`` (absolute query position ``q_start[b] + i``) iff
     ``pos < kv_lens[b]`` (tail / null-page mask) and
     ``pos ≤ q_start[b] + i`` (causal frontier inside the chunk).
+    ``ks_ref`` is the int8 pool's (1, ps, 1) scale block (see
+    ``paged_decode._page_rows``).
     """
     b = pl.program_id(0)
     p = pl.program_id(2)
     q = q_ref[0, 0].astype(jnp.float32)          # (G, C, Dh)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)    # (ps, Dh)
+    k = _page_rows(k_ref, ks_ref)                # (ps, Dh)
     s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
@@ -97,14 +101,24 @@ def _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size):
 # ---------------------------------------------------------------------------
 
 
-def _pf_rowmax_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, *, scale,
-                      page_size):
+def _accum_rowmax(s, m_ref):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
 
-    s = _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size)
     m_ref[0, 0] = jnp.maximum(m_ref[0, 0], jnp.max(s, axis=-1))
+
+
+def _pf_rowmax_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, *, scale,
+                      page_size):
+    _accum_rowmax(_chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale,
+                                page_size), m_ref)
+
+
+def _pf_rowmax_kernel_int8(bt_ref, kl_ref, qs_ref, q_ref, k_ref, ks_ref,
+                           m_ref, *, scale, page_size):
+    _accum_rowmax(_chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale,
+                                page_size, ks_ref=ks_ref), m_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -112,14 +126,12 @@ def _pf_rowmax_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, *, scale,
 # ---------------------------------------------------------------------------
 
 
-def _pf_sum_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, lut_ref,
-                   s_ref, *, scale, page_size, method, exp_step, index_mode,
-                   lookup):
+def _accum_sum(s, m_ref, lut_ref, s_ref, method, exp_step, index_mode,
+               lookup):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         s_ref[...] = jnp.zeros_like(s_ref)
 
-    s = _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size)
     g, c, ps = s.shape
     m = m_ref[0, 0]                               # (G, C)
     m = jnp.where(jnp.isfinite(m), m, 0.0)
@@ -129,15 +141,29 @@ def _pf_sum_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, lut_ref,
         s_ref[0, 0] += jnp.sum(e.astype(jnp.float32), axis=-1).reshape(g, c)
 
 
+def _pf_sum_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, m_ref, lut_ref,
+                   s_ref, *, scale, page_size, method, exp_step, index_mode,
+                   lookup):
+    _accum_sum(_chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size),
+               m_ref, lut_ref, s_ref, method, exp_step, index_mode, lookup)
+
+
+def _pf_sum_kernel_int8(bt_ref, kl_ref, qs_ref, q_ref, k_ref, ks_ref, m_ref,
+                        lut_ref, s_ref, *, scale, page_size, method, exp_step,
+                        index_mode, lookup):
+    _accum_sum(_chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size,
+                             ks_ref=ks_ref),
+               m_ref, lut_ref, s_ref, method, exp_step, index_mode, lookup)
+
+
 # ---------------------------------------------------------------------------
 # Pass 3 — per-element σ · V (faithful requantization, online across pages)
 # ---------------------------------------------------------------------------
 
 
-def _pf_weight_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, v_ref, m_ref,
-                      s_ref, lut_main_ref, lut_aux_ref, o_ref, *, scale,
-                      page_size, method, qmax, exp_step, scale_ex, scale_sum,
-                      index_mode, lookup):
+def _accum_weight(s, v, m_ref, s_ref, lut_main_ref, lut_aux_ref, o_ref,
+                  method, qmax, exp_step, scale_ex, scale_sum, index_mode,
+                  lookup):
     """Accumulate out += σ(s, m, S) @ V_page with the policy's per-element
     weights — REXP re-quantizes σ_int per element (Algorithm 1 line 11),
     2D-LUT reads LUT_σ[i(e), j(S)] (Algorithm 2), exact divides by S.
@@ -146,7 +172,6 @@ def _pf_weight_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, v_ref, m_ref,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    s = _chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale, page_size)
     g, c, ps = s.shape
     m = m_ref[0, 0]
     m = jnp.where(jnp.isfinite(m), m, 0.0)
@@ -166,10 +191,32 @@ def _pf_weight_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, v_ref, m_ref,
         with dequant_scope():  # σ_int/qmax: the sanctioned exit
             w = sigma_int.astype(jnp.float32) * inv_scale(qmax)
 
-    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (ps, Dh)
     o_ref[0, 0] += jax.lax.dot_general(
         w.astype(jnp.float32), v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32).reshape(g, c, -1)
+
+
+def _pf_weight_kernel(bt_ref, kl_ref, qs_ref, q_ref, k_ref, v_ref, m_ref,
+                      s_ref, lut_main_ref, lut_aux_ref, o_ref, *, scale,
+                      page_size, method, qmax, exp_step, scale_ex, scale_sum,
+                      index_mode, lookup):
+    _accum_weight(_chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale,
+                                page_size),
+                  _page_rows(v_ref, None), m_ref, s_ref, lut_main_ref,
+                  lut_aux_ref, o_ref, method, qmax, exp_step, scale_ex,
+                  scale_sum, index_mode, lookup)
+
+
+def _pf_weight_kernel_int8(bt_ref, kl_ref, qs_ref, q_ref, k_ref, ks_ref,
+                           v_ref, vs_ref, m_ref, s_ref, lut_main_ref,
+                           lut_aux_ref, o_ref, *, scale, page_size, method,
+                           qmax, exp_step, scale_ex, scale_sum, index_mode,
+                           lookup):
+    _accum_weight(_chunk_logits(q_ref, k_ref, kl_ref, qs_ref, scale,
+                                page_size, ks_ref=ks_ref),
+                  _page_rows(v_ref, vs_ref), m_ref, s_ref, lut_main_ref,
+                  lut_aux_ref, o_ref, method, qmax, exp_step, scale_ex,
+                  scale_sum, index_mode, lookup)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +230,14 @@ def _pool_spec(page_size, dh):
     return pl.BlockSpec(
         (1, page_size, 1, dh),
         lambda b, h, p, bt_ref, kl_ref, qs_ref: (bt_ref[b, p], 0, h, 0))
+
+
+def _scale_spec(page_size):
+    """The int8 pool's per-page scale block — rides the same
+    scalar-prefetched block-table indirection as its page."""
+    return pl.BlockSpec(
+        (1, page_size, 1),
+        lambda b, h, p, bt_ref, kl_ref, qs_ref: (bt_ref[b, p], 0, h))
 
 
 def _lut_spec(arr):
@@ -208,14 +263,7 @@ def _grid_specs(g, c, dh, page_size):
     return q_spec, kv_spec, acc_spec, o_spec
 
 
-def kernel_spec(geom):
-    """Static declaration for :mod:`repro.analysis.kernel_guard`.
-
-    Uses the launcher's own ``_grid_specs`` / ``_pool_spec``; the probe
-    block table exercises both extremes of the declared domain
-    ``[0, n_pages)``, ``q_start`` spans 0 and a mid-prompt cursor.
-    Table operands use the worst-case (int16 2D-LUT) shapes.
-    """
+def _build_kernel_spec(geom, quantized):
     import numpy as np
 
     from repro.analysis.kernel_guard import KernelSpec, Operand, PassSpec
@@ -239,11 +287,19 @@ def kernel_spec(geom):
     # aux slot carries α (rexp, (1,16)) or σ (lut2d); σ (11,60) is worst
     lut_aux = l2d.lut_sigma
 
+    page_dtype = "int8" if quantized else "float32"
     q = Operand("q", (b, kvh, g, c, dh), q_spec)
     kv = Operand("k_pages", (n_pages, page_size, kvh, dh), kv_spec,
-                 table_indexed=True, index_domain=(0, n_pages))
+                 page_dtype, table_indexed=True, index_domain=(0, n_pages))
     vv = Operand("v_pages", (n_pages, page_size, kvh, dh), kv_spec,
+                 page_dtype, table_indexed=True, index_domain=(0, n_pages))
+    sc = _scale_spec(page_size)
+    ks = Operand("k_scales", (n_pages, page_size, kvh), sc,
                  table_indexed=True, index_domain=(0, n_pages))
+    vs = Operand("v_scales", (n_pages, page_size, kvh), sc,
+                 table_indexed=True, index_domain=(0, n_pages))
+    kk = (kv, ks) if quantized else (kv,)
+    vvv = (vv, vs) if quantized else (vv,)
     m = Operand("m", (b, kvh, g, c), acc_spec)
     s = Operand("s_sum", (b, kvh, g, c), acc_spec)
     o = Operand("out", (b, kvh, g, c, dh), o_spec)
@@ -251,18 +307,45 @@ def kernel_spec(geom):
     t_aux = Operand("lut_aux", lut_aux.shape, _lut_spec(lut_aux), "int32")
 
     passes = (
-        PassSpec("rowmax", grid, (q, kv), (m,), scalar_prefetch=prefetch),
-        PassSpec("sum", grid, (q, kv, m, t_main), (s,),
+        PassSpec("rowmax", grid, (q,) + kk, (m,), scalar_prefetch=prefetch),
+        PassSpec("sum", grid, (q,) + kk + (m, t_main), (s,),
                  scalar_prefetch=prefetch, sigma_acc=True,
                  acc_dtype="float32",
                  notes="integer Σ accumulated f32-exact in the resident ref"),
-        PassSpec("weight", grid, (q, kv, vv, m, s, t_main, t_aux), (o,),
-                 scalar_prefetch=prefetch),
+        PassSpec("weight", grid, (q,) + kk + vvv + (m, s, t_main, t_aux),
+                 (o,), scalar_prefetch=prefetch),
     )
+    if quantized:
+        return KernelSpec(
+            name="paged_prefill_int8", module=__name__, kind="pallas",
+            passes=passes,
+            notes="int8 pool variant of the chunked prefill: pages stream "
+                  "as int8 with per-token f32 scale blocks; dequant in "
+                  "VMEM under dequant_scope")
     return KernelSpec(
         name="paged_prefill", module=__name__, kind="pallas", passes=passes,
         notes="chunked prefill streaming pages from the pool; causal "
               "frontier handled per element via prefetched q_start")
+
+
+def kernel_spec(geom):
+    """Static declaration for :mod:`repro.analysis.kernel_guard`.
+
+    Uses the launcher's own ``_grid_specs`` / ``_pool_spec``; the probe
+    block table exercises both extremes of the declared domain
+    ``[0, n_pages)``, ``q_start`` spans 0 and a mid-prompt cursor.
+    Table operands use the worst-case (int16 2D-LUT) shapes.
+    """
+    return _build_kernel_spec(geom, quantized=False)
+
+
+def kernel_spec_int8(geom):
+    """The int8-pool variant's declaration (``paged_prefill_int8``).
+
+    Same grid and accumulators as :func:`kernel_spec`; the K/V page
+    operands are int8 and each carries a per-token f32 scale operand
+    read through the identical block-table indirection."""
+    return _build_kernel_spec(geom, quantized=True)
 
 
 def paged_prefill_attention(
@@ -279,6 +362,8 @@ def paged_prefill_attention(
     index_mode: str = "round",
     lookup: str = "select",
     interpret: bool | None = None,
+    k_scales: Array | None = None,  # (num_pages, page_size, KVH) f32
+    v_scales: Array | None = None,
 ) -> Array:
     """Fused paged-prefill attention; returns (B, H, C, Dh) f32.
 
@@ -286,6 +371,11 @@ def paged_prefill_attention(
     interpreter emulation elsewhere — callers never get a silent
     interpreter run on real hardware, and CPU callers never get a
     lowering error.
+
+    ``k_scales``/``v_scales`` (both or neither) select the int8-pool
+    variant — same contract as ``paged_decode_attention``: int8 pages
+    with per-token × KV-head f32 scales, dequantized in VMEM before the
+    identical 3-pass pipeline.
 
     Numerics match ``ops.lut_attention_prefill_varlen`` on the gathered
     view: identical integer pipeline (bins, e_int, Σ, σ_int); the final
@@ -296,6 +386,9 @@ def paged_prefill_attention(
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    quantized = k_scales is not None
+    assert quantized == (v_scales is not None), \
+        "int8 pool needs both k_scales and v_scales"
     b, h, c, dh = q.shape
     num_pages, page_size, kvh, _ = k_pages.shape
     assert h % kvh == 0, (h, kvh)
@@ -320,37 +413,46 @@ def paged_prefill_attention(
      scale_sum) = policy_kernel_tables(method, tables)
 
     geom = dict(scale=scale, page_size=page_size)
+    sc_spec = _scale_spec(page_size)
+    # the int8 variants interleave each page's scale block right after it
+    k_in = [kv_spec, sc_spec] if quantized else [kv_spec]
+    k_ops = (k_pages, k_scales) if quantized else (k_pages,)
+    v_in = [kv_spec, sc_spec] if quantized else [kv_spec]
+    v_ops = (v_pages, v_scales) if quantized else (v_pages,)
+    rowmax_k = _pf_rowmax_kernel_int8 if quantized else _pf_rowmax_kernel
+    sum_k = _pf_sum_kernel_int8 if quantized else _pf_sum_kernel
+    weight_k = _pf_weight_kernel_int8 if quantized else _pf_weight_kernel
 
     # Pass 1: global row max, accumulated online over the page chunks.
     m = pl.pallas_call(
-        functools.partial(_pf_rowmax_kernel, **geom),
-        grid_spec=spec([q_spec, kv_spec], acc_spec),
+        functools.partial(rowmax_k, **geom),
+        grid_spec=spec([q_spec] + k_in, acc_spec),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, c), jnp.float32),
         interpret=interpret,
-    )(block_tables, kv_lens, q_start, qg, k_pages)
+    )(block_tables, kv_lens, q_start, qg, *k_ops)
 
     # Pass 2: global Σ of the policy's numerators.
     s_sum = pl.pallas_call(
-        functools.partial(_pf_sum_kernel, method=method, exp_step=exp_step,
+        functools.partial(sum_k, method=method, exp_step=exp_step,
                           index_mode=index_mode, lookup=lookup, **geom),
-        grid_spec=spec([q_spec, kv_spec, acc_spec, _lut_spec(lut_main)],
+        grid_spec=spec([q_spec] + k_in + [acc_spec, _lut_spec(lut_main)],
                        acc_spec),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, c), jnp.float32),
         interpret=interpret,
-    )(block_tables, kv_lens, q_start, qg, k_pages, m, lut_main)
+    )(block_tables, kv_lens, q_start, qg, *k_ops, m, lut_main)
 
     # Pass 3: per-element σ · V, accumulated page by page.
     out = pl.pallas_call(
-        functools.partial(_pf_weight_kernel, method=method, qmax=qmax,
+        functools.partial(weight_k, method=method, qmax=qmax,
                           exp_step=exp_step, scale_ex=scale_ex,
                           scale_sum=scale_sum, index_mode=index_mode,
                           lookup=lookup, **geom),
-        grid_spec=spec([q_spec, kv_spec, kv_spec, acc_spec, acc_spec,
+        grid_spec=spec([q_spec] + k_in + v_in + [acc_spec, acc_spec,
                         _lut_spec(lut_main), _lut_spec(lut_aux)],
                        o_spec),
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, c, dh), jnp.float32),
         interpret=interpret,
-    )(block_tables, kv_lens, q_start, qg, k_pages, v_pages, m, s_sum,
+    )(block_tables, kv_lens, q_start, qg, *k_ops, *v_ops, m, s_sum,
       lut_main, lut_aux)
 
     return out.reshape(b, h, c, dh)

@@ -166,12 +166,15 @@ def _sigma_from_terms(e: Array, s_sum: Array, policy: SoftmaxPolicy,
 
 
 def _partials_body(policy: SoftmaxPolicy, tables, scale: float, causal: bool,
-                   slab: int, axis: str):
+                   slab: int, axis: str, quantized: bool = False):
     """'pages'-regime body: local (m, Σ, σ·V) partials + tiny reductions.
 
     Runs per device on the local page slab ``[idx·slab, (idx+1)·slab)``;
     positions whose page lives elsewhere are −inf-masked, so each valid
-    key is claimed by exactly one device.
+    key is claimed by exactly one device.  ``quantized`` appends the
+    slab's f32 scale arrays to the signature (they shard with their
+    pages) and dequantizes the local views before the identical partials
+    pipeline.
     """
     from repro.kernels.common import dequant_scope, policy_kernel_tables
     from repro.kernels.lut_attention import ops as _ops
@@ -179,11 +182,16 @@ def _partials_body(policy: SoftmaxPolicy, tables, scale: float, causal: bool,
 
     ktabs = policy_kernel_tables(policy.impl, tables)
 
-    def body(q, k_slab, v_slab, bt, q_start, kv_lens):
+    def body(q, k_slab, v_slab, bt, q_start, kv_lens, *scales):
         lo = jax.lax.axis_index(axis) * slab
         local, lbt = _gather_page_ids(bt, lo, slab)    # (B, mp)
-        k_view = _ops.gather_pages(k_slab, lbt)        # (B, KVH, mp·ps, D)
-        v_view = _ops.gather_pages(v_slab, lbt)
+        if quantized:
+            ks_slab, vs_slab = scales
+            k_view, v_view = _ops._gather_dequant(k_slab, v_slab, lbt,
+                                                  ks_slab, vs_slab)
+        else:
+            k_view = _ops.gather_pages(k_slab, lbt)    # (B, KVH, mp·ps, D)
+            v_view = _ops.gather_pages(v_slab, lbt)
         lq, ps = q.shape[2], k_slab.shape[1]
         lk = k_view.shape[2]
         s = _ref._logits(q, k_view, scale, causal=False)  # (B, H, Lq, Lk)
@@ -220,6 +228,8 @@ def paged_attention_sharded(
     q_start: Array | None = None,  # (B,) int32 — prefill chunks only
     scale: float | None = None,
     axis: str = "model",
+    k_scales: Array | None = None,  # (P, ps, KVH) f32 — int8 pool only
+    v_scales: Array | None = None,
 ) -> Array:
     """Tensor-parallel paged attention for both serving phases.
 
@@ -228,6 +238,12 @@ def paged_attention_sharded(
     prefill semantics of ``lut_attention_prefill_varlen``.  Output is
     replicated across the mesh so the surrounding (replicated) layer
     compute stays bitwise the single-device program.
+
+    ``k_scales``/``v_scales`` (both or neither) select the int8 pool:
+    the scale arrays shard exactly with their pages in BOTH regimes
+    (KV-head axis in 'heads', page axis in 'pages' —
+    ``partitioning.paged_pool_pspec(..., scales=True)``), and each
+    device dequantizes only its local view.
     """
     from repro.kernels.lut_attention import ops as _ops
 
@@ -236,6 +252,10 @@ def paged_attention_sharded(
     causal = q_start is not None
     qs = q_start if causal else jnp.zeros_like(kv_lens)
     tables = _ops._tables_for(policy)
+    quantized = k_scales is not None
+    assert quantized == (v_scales is not None), \
+        "int8 pool needs both k_scales and v_scales"
+    sc_args = (k_scales, v_scales) if quantized else ()
 
     if regime == "heads":
         if q.shape[1] % tp or k_pages.shape[2] % tp:
@@ -243,9 +263,12 @@ def paged_attention_sharded(
                 f"'heads' regime needs H ({q.shape[1]}) and KVH "
                 f"({k_pages.shape[2]}) divisible by tp={tp}")
 
-        def body(q_, k_, v_, bt_, qs_, kl_):
-            k_seq = _ops.gather_pages(k_, bt_)
-            v_seq = _ops.gather_pages(v_, bt_)
+        def body(q_, k_, v_, bt_, qs_, kl_, *sc_):
+            if quantized:
+                k_seq, v_seq = _ops._gather_dequant(k_, v_, bt_, *sc_)
+            else:
+                k_seq = _ops.gather_pages(k_, bt_)
+                v_seq = _ops.gather_pages(v_, bt_)
             if causal:
                 return _ops.lut_attention_prefill_varlen(
                     q_, k_seq, v_seq, policy, q_start=qs_, kv_lens=kl_,
@@ -253,15 +276,16 @@ def paged_attention_sharded(
             return _ops.lut_attention_decode_varlen(
                 q_, k_seq, v_seq, policy, kl_, scale=scale)
 
+        sc_specs = 2 * (P(None, None, axis),) if quantized else ()
         out = shard_map(
             body, mesh=mesh,
             in_specs=(P(None, axis, None, None),
                       P(None, None, axis, None),
                       P(None, None, axis, None),
-                      P(None, None), P(None), P(None)),
+                      P(None, None), P(None), P(None)) + sc_specs,
             out_specs=P(None, axis, None, None),
             check_vma=False,
-        )(q, k_pages, v_pages, block_tables, qs, kv_lens)
+        )(q, k_pages, v_pages, block_tables, qs, kv_lens, *sc_args)
         # replicate the head-sharded output: B·H·D floats on the wire,
         # and everything downstream computes replicated (bitwise the
         # single-device program)
@@ -275,14 +299,16 @@ def paged_attention_sharded(
             f"'pages' regime needs n_pages ({k_pages.shape[0]}) divisible "
             f"by tp={tp} — size the pool with pool_shape(..., tp=tp)")
     slab = k_pages.shape[0] // tp
-    body = _partials_body(policy, tables, scale, causal, slab, axis)
+    body = _partials_body(policy, tables, scale, causal, slab, axis,
+                          quantized=quantized)
+    sc_specs = 2 * (P(axis, None, None),) if quantized else ()
     return shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(axis, None, None, None), P(axis, None, None, None),
-                  P(None, None), P(None), P(None)),
+                  P(None, None), P(None), P(None)) + sc_specs,
         out_specs=P(),
         check_vma=False,
-    )(q, k_pages, v_pages, block_tables, qs, kv_lens)
+    )(q, k_pages, v_pages, block_tables, qs, kv_lens, *sc_args)
 
 
 def kernel_spec(geom):
@@ -332,10 +358,14 @@ def scatter_chunk_sharded(
     k_pages: Array, v_pages: Array,   # (P, ps, KVH, D), page-axis sharded
     phys: Array, offs: Array,         # (B, C) int32 physical page / offset
     k_tok: Array, v_tok: Array,       # (B, C, KVH, D)
+    k_scales: Array | None = None,    # (P, ps, KVH) f32 scale pools,
+    v_scales: Array | None = None,    # page-axis sharded (int8 pool only)
+    k_sc: Array | None = None,        # (B, C, KVH) f32 entering-token scales
+    v_sc: Array | None = None,
     *,
     mesh: Mesh,
     axis: str = "model",
-) -> tuple[Array, Array]:
+) -> tuple[Array, Array, Array | None, Array | None]:
     """Write entering K/V tokens into a page-axis-sharded pool.
 
     Each device keeps only the writes that land in its own slab —
@@ -343,21 +373,42 @@ def scatter_chunk_sharded(
     (``mode='drop'``), so no cross-device traffic and no risk of a
     clipped foreign write colliding with a real local one.  Decode calls
     this with C == 1; prefill with C == chunk.
+
+    For an int8 pool the per-token scales are scattered through the SAME
+    clipped page ids inside the SAME shard_map body, so a page and its
+    scale block can never land on different devices (the COW copy relies
+    on page+scale moving atomically).  Returns
+    ``(k_pages, v_pages, k_scales, v_scales)`` — the scale slots are
+    ``None`` for an f32 pool.
     """
     slab = k_pages.shape[0] // _tp(mesh, axis)
+    quantized = k_scales is not None
 
-    def body(kp, vp, ph, of, kt, vt):
+    def body(kp, vp, ph, of, kt, vt, *sc):
         lo = jax.lax.axis_index(axis) * slab
         lph = _scatter_page_ids(ph, lo, slab)  # out of range → dropped
         kp = kp.at[lph, of].set(kt, mode="drop")
         vp = vp.at[lph, of].set(vt, mode="drop")
-        return kp, vp
+        if not quantized:
+            return kp, vp
+        ksp, vsp, ks, vs = sc
+        ksp = ksp.at[lph, of].set(ks, mode="drop")
+        vsp = vsp.at[lph, of].set(vs, mode="drop")
+        return kp, vp, ksp, vsp
 
     pool_spec = P(axis, None, None, None)
-    return shard_map(
-        body, mesh=mesh,
-        in_specs=(pool_spec, pool_spec, P(None, None), P(None, None),
-                  P(None, None, None, None), P(None, None, None, None)),
-        out_specs=(pool_spec, pool_spec),
-        check_vma=False,
-    )(k_pages, v_pages, phys, offs, k_tok, v_tok)
+    scale_pool_spec = P(axis, None, None)
+    in_specs = (pool_spec, pool_spec, P(None, None), P(None, None),
+                P(None, None, None, None), P(None, None, None, None))
+    args = (k_pages, v_pages, phys, offs, k_tok, v_tok)
+    out_specs = (pool_spec, pool_spec)
+    if quantized:
+        in_specs += (scale_pool_spec, scale_pool_spec,
+                     P(None, None, None), P(None, None, None))
+        args += (k_scales, v_scales, k_sc, v_sc)
+        out_specs += (scale_pool_spec, scale_pool_spec)
+    out = shard_map(body, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_vma=False)(*args)
+    if quantized:
+        return out
+    return out + (None, None)

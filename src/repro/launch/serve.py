@@ -89,6 +89,12 @@ def main() -> None:
                     help="continuous-engine paged attention (decode AND "
                          "prefill chunks): fused Pallas paged kernels vs "
                          "dense block-table references")
+    ap.add_argument("--kv-dtype", default="f32", choices=["f32", "int8"],
+                    help="KV page-pool storage: int8 stores pages "
+                         "quantized with per-token f32 scales (halved "
+                         "pool bytes and streamed VMEM; dequant inside "
+                         "the paged kernels; <1%% accuracy budget — see "
+                         "README §Quantized KV pool)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=256)
     ap.add_argument("--prefill-chunk", type=int, default=16,
@@ -135,7 +141,8 @@ def main() -> None:
               if args.softmax != "exact" else SoftmaxPolicy())
     run = RunConfig(dtype="float32", attention_backend="naive",
                     scan_layers=True, softmax_policy=policy, ssm_chunk=32,
-                    paged_backend=args.paged_backend)
+                    paged_backend=args.paged_backend,
+                    kv_dtype=args.kv_dtype)
 
     key = jax.random.PRNGKey(args.seed)
     params = init_train_state(model, key, run).params
@@ -191,6 +198,18 @@ def main() -> None:
             prefix_cache=args.prefix_cache,
             pipeline_depth=args.pipeline_depth,
             mesh=mesh, shard_params=args.shard_params))
+        if args.kv_dtype != "f32":
+            pool0 = eng.pools[0]
+            page_bytes = sum(int(np.asarray(v).nbytes)
+                             for k, v in pool0.items() if "pages" in k)
+            scale_bytes = sum(int(np.asarray(v).nbytes)
+                              for k, v in pool0.items() if "scales" in k)
+            f32_bytes = 4 * page_bytes  # int8 pages, same element count
+            print(f"kv_dtype={args.kv_dtype}: quantized KV pool — "
+                  f"{page_bytes + scale_bytes} pool bytes/layer "
+                  f"(pages {page_bytes} + scales {scale_bytes}) vs "
+                  f"{f32_bytes} at f32, "
+                  f"{(page_bytes + scale_bytes) / f32_bytes:.2f}x")
         rng = np.random.default_rng(args.seed)
         if args.serve:
             import asyncio

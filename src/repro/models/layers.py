@@ -156,12 +156,19 @@ class PagedAttnCache:
     Physical page 0 is the reserved **null page**: inactive slots map
     every logical page to it, so their (masked-out, garbage) decode
     writes can proceed unconditionally without touching live pages.
+
+    With ``kv_dtype='int8'`` the pools store int8 and ``k_scales`` /
+    ``v_scales`` carry the f32 per-(page, token, KV-head) scales
+    (``runtime.paged_cache.scale_pool_shape``); ``None`` (the f32 pool)
+    keeps the historical 4-field pytree exactly.
     """
 
     k_pages: Array       # (n_pages, page_size, KVH, Dh)
     v_pages: Array
     block_tables: Array  # (B, max_pages_per_seq) int32 physical page ids
     lengths: Array       # (B,) int32 — tokens already cached per slot
+    k_scales: Array | None = None   # (n_pages, page_size, KVH) f32
+    v_scales: Array | None = None
 
     @property
     def page_size(self) -> int:
@@ -179,7 +186,8 @@ class PagedAttnCache:
 
 
 jax.tree_util.register_dataclass(
-    PagedAttnCache, ["k_pages", "v_pages", "block_tables", "lengths"], [])
+    PagedAttnCache, ["k_pages", "v_pages", "block_tables", "lengths",
+                     "k_scales", "v_scales"], [])
 
 
 @dataclasses.dataclass
@@ -201,6 +209,8 @@ class PagedPrefillCache:
     block_tables: Array  # (B, max_pages_per_seq) int32
     lengths: Array       # (B,) int32 — tokens cached before this chunk
     chunk_lens: Array    # (B,) int32 — valid tokens entering this chunk
+    k_scales: Array | None = None   # (n_pages, page_size, KVH) f32
+    v_scales: Array | None = None
 
     @property
     def page_size(self) -> int:
@@ -209,7 +219,8 @@ class PagedPrefillCache:
 
 jax.tree_util.register_dataclass(
     PagedPrefillCache,
-    ["k_pages", "v_pages", "block_tables", "lengths", "chunk_lens"], [])
+    ["k_pages", "v_pages", "block_tables", "lengths", "chunk_lens",
+     "k_scales", "v_scales"], [])
 
 
 def _paged_mesh(n_kv_heads: int):
@@ -269,29 +280,45 @@ def _paged_prefill_chunk(p: Params, x: Array, cache: PagedPrefillCache, *,
     # padding rows (and anything past the block table) land on the null
     # page, which is garbage by definition — the write needs no branch
     phys = jnp.where(valid & (positions // ps < mp), phys, 0)
-    k_tok = k.transpose(0, 2, 1, 3).astype(cache.k_pages.dtype)  # (B,C,KVH,Dh)
-    v_tok = v.transpose(0, 2, 1, 3).astype(cache.v_pages.dtype)
+    quantized = cache.k_scales is not None
+    if quantized:
+        # int8 pool: quantize at scatter time, one scale per (token, KV
+        # head) row — appending never requants neighbours, so chunking
+        # and placement stay semantically invisible (same values as the
+        # lockstep fake-quant, bit for bit)
+        from repro.core.quantization import quantize_rows
+        k_tok, k_sc = quantize_rows(k.transpose(0, 2, 1, 3))  # (B,C,KVH,·)
+        v_tok, v_sc = quantize_rows(v.transpose(0, 2, 1, 3))
+    else:
+        k_tok = k.transpose(0, 2, 1, 3).astype(cache.k_pages.dtype)
+        v_tok = v.transpose(0, 2, 1, 3).astype(cache.v_pages.dtype)
+        k_sc = v_sc = None
     mesh, regime = _paged_mesh(n_kv_heads)
+    k_scales, v_scales = cache.k_scales, cache.v_scales
     if regime == "pages":
         # page-axis-sharded pool: the write must stay slab-local
         from repro.kernels.lut_attention.sharded_paged import (
             scatter_chunk_sharded)
-        k_pages, v_pages = scatter_chunk_sharded(
+        k_pages, v_pages, k_scales, v_scales = scatter_chunk_sharded(
             cache.k_pages, cache.v_pages, phys, offs, k_tok, v_tok,
+            k_scales=k_scales, v_scales=v_scales, k_sc=k_sc, v_sc=v_sc,
             mesh=mesh)
     else:
         k_pages = cache.k_pages.at[phys, offs].set(k_tok)
         v_pages = cache.v_pages.at[phys, offs].set(v_tok)
+        if quantized:
+            k_scales = cache.k_scales.at[phys, offs].set(k_sc)
+            v_scales = cache.v_scales.at[phys, offs].set(v_sc)
 
     out = lut_attention_paged_prefill(
         q, k_pages, v_pages, cache.block_tables,
         q_start=cache.lengths, kv_lens=cache.lengths + cache.chunk_lens,
         policy=policy, backend=paged_backend, q_chunk=q_chunk,
-        k_chunk=k_chunk, mesh=mesh)
+        k_chunk=k_chunk, mesh=mesh, k_scales=k_scales, v_scales=v_scales)
     new_cache = PagedPrefillCache(
         k_pages=k_pages, v_pages=v_pages, block_tables=cache.block_tables,
         lengths=cache.lengths + cache.chunk_lens,
-        chunk_lens=cache.chunk_lens)
+        chunk_lens=cache.chunk_lens, k_scales=k_scales, v_scales=v_scales)
     return out, new_cache
 
 
@@ -324,30 +351,46 @@ def _paged_decode(p: Params, x: Array, cache: PagedAttnCache, *,
     offs = cache.lengths % ps
     phys = jnp.take_along_axis(cache.block_tables, page_idx[:, None],
                                axis=1)[:, 0]               # (B,)
-    k_tok = k[:, :, 0].astype(cache.k_pages.dtype)         # (B, KVH, Dh)
-    v_tok = v[:, :, 0].astype(cache.v_pages.dtype)
+    quantized = cache.k_scales is not None
+    if quantized:
+        from repro.core.quantization import quantize_rows
+        k_tok, k_sc = quantize_rows(k[:, :, 0])            # (B, KVH, Dh)
+        v_tok, v_sc = quantize_rows(v[:, :, 0])
+    else:
+        k_tok = k[:, :, 0].astype(cache.k_pages.dtype)     # (B, KVH, Dh)
+        v_tok = v[:, :, 0].astype(cache.v_pages.dtype)
+        k_sc = v_sc = None
     mesh, regime = _paged_mesh(n_kv_heads)
+    k_scales, v_scales = cache.k_scales, cache.v_scales
     if regime == "pages":
         # page-axis-sharded pool: the write must stay slab-local
         from repro.kernels.lut_attention.sharded_paged import (
             scatter_chunk_sharded)
-        k_pages, v_pages = scatter_chunk_sharded(
+        k_pages, v_pages, k_scales, v_scales = scatter_chunk_sharded(
             cache.k_pages, cache.v_pages, phys[:, None], offs[:, None],
-            k_tok[:, None], v_tok[:, None], mesh=mesh)
+            k_tok[:, None], v_tok[:, None],
+            k_scales=k_scales, v_scales=v_scales,
+            k_sc=None if k_sc is None else k_sc[:, None],
+            v_sc=None if v_sc is None else v_sc[:, None], mesh=mesh)
     else:
         # inactive slots all target the null page; duplicate scatter
         # indices there are harmless (the page is garbage by definition)
         k_pages = cache.k_pages.at[phys, offs].set(k_tok)
         v_pages = cache.v_pages.at[phys, offs].set(v_tok)
+        if quantized:
+            k_scales = cache.k_scales.at[phys, offs].set(k_sc)
+            v_scales = cache.v_scales.at[phys, offs].set(v_sc)
 
     out = lut_attention_paged_decode(q, k_pages, v_pages,
                                      cache.block_tables,
                                      kv_lens=cache.lengths + 1,
                                      policy=policy, backend=paged_backend,
-                                     mesh=mesh)
+                                     mesh=mesh, k_scales=k_scales,
+                                     v_scales=v_scales)
     new_cache = PagedAttnCache(k_pages=k_pages, v_pages=v_pages,
                                block_tables=cache.block_tables,
-                               lengths=cache.lengths + 1)
+                               lengths=cache.lengths + 1,
+                               k_scales=k_scales, v_scales=v_scales)
     return out, new_cache
 
 
@@ -393,6 +436,12 @@ def apply_attention(
     unroll: bool = False,            # unroll blocked-attention chunk loops
     paged_backend: str = "auto",     # paged attn (decode + prefill chunks):
                                      # 'auto'|'pallas'|'dense'
+    kv_dtype: str = "f32",           # lockstep KV storage emulation:
+                                     # 'int8' fake-quants K/V entering the
+                                     # contiguous cache with the SAME
+                                     # rounding the paged int8 pool uses
+                                     # (paged caches carry real scales
+                                     # instead and ignore this knob)
 ) -> tuple[Array, AttnCache | None]:
     """Self- or cross-attention with pluggable softmax semantics.
 
@@ -451,6 +500,15 @@ def apply_attention(
     kv_len = None
     new_cache = None
     if cache is not None:
+        if kv_dtype == "int8":
+            # lockstep view of the engine's int8 pool: the engine reads
+            # the current token's K/V back quantized from the pool, so
+            # the cache write (which the attention below reads through)
+            # snaps K/V onto the identical int8 grid — shared helper,
+            # one rounding convention, token-identical streams
+            from repro.core.quantization import fake_quant_rows
+            k = fake_quant_rows(k).astype(k.dtype)
+            v = fake_quant_rows(v).astype(v.dtype)
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             cache.k, k.astype(cache.k.dtype), cache.length, axis=2)
         v_cache = jax.lax.dynamic_update_slice_in_dim(

@@ -64,7 +64,7 @@ class Model:
             raise NotImplementedError("paged decode: decoder-only LMs")
         dtype = jnp.bfloat16 if run.dtype == "bfloat16" else jnp.float32
         return TF.init_paged_pools(self.cfg, n_pages, page_size, dtype,
-                                   mesh=mesh)
+                                   mesh=mesh, kv_dtype=run.kv_dtype)
 
     def decode_step_paged(self, params, token, pools, block_tables, lengths,
                           run: RunConfig):

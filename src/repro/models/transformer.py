@@ -92,7 +92,8 @@ def apply_block(p: Params, x: Array, cfg: ArchConfig, run: RunConfig,
             rope_theta=cfg.rope_theta if cfg.rope else None,
             policy=policy, backend=run.attention_backend, cache=cache,
             collector=collector, q_chunk=run.q_chunk, k_chunk=run.k_chunk,
-            unroll=run.probe_unroll, paged_backend=run.paged_backend)
+            unroll=run.probe_unroll, paged_backend=run.paged_backend,
+            kv_dtype=run.kv_dtype)
     elif spec.mixer == "mamba":
         mixed, new_cache = SSM.apply_mamba(p["mixer"], h, chunk=run.ssm_chunk,
                                            cache=cache, remat=run.remat,
@@ -285,38 +286,54 @@ def check_paged_supported(cfg: ArchConfig) -> None:
 
 
 def init_paged_pools(cfg: ArchConfig, n_pages: int, page_size: int, dtype,
-                     mesh=None):
+                     mesh=None, kv_dtype: str = "f32"):
     """Per-layer paged KV pools, periods-stacked like :func:`init_caches`.
 
     Each layer's pool follows the kernel-facing page-major layout
-    (:func:`repro.runtime.paged_cache.pool_shape`); page 0 of every pool
-    is the reserved null page (see
-    :class:`repro.models.layers.PagedAttnCache`).
+    (:func:`repro.runtime.paged_cache.pool_leaf_specs`); page 0 of every
+    pool is the reserved null page (see
+    :class:`repro.models.layers.PagedAttnCache`).  ``kv_dtype='int8'``
+    stores the pages as int8 and adds zero-initialized f32
+    ``k_scales``/``v_scales`` leaves (per page × token × KV head).
 
     With a ``mesh`` the pools are placed tensor-parallel
     (``partitioning.paged_pool_pspec``): KV heads over 'model' when
     divisible, else the page axis — padded up to a slab multiple — so
-    the paged attention dispatch runs in its sharded regimes.
+    the paged attention dispatch runs in its sharded regimes; scale
+    leaves shard with their pages.
     """
     from repro.runtime import partitioning as PT
-    from repro.runtime.paged_cache import pool_shape
+    from repro.runtime.paged_cache import pool_leaf_specs
     check_paged_supported(cfg)
     tp = PT.mesh_model_tp(mesh)
-    shape = (cfg.n_periods,) + pool_shape(n_pages, page_size,
-                                          cfg.n_kv_heads,
-                                          cfg.resolved_head_dim, tp=tp)
-    if mesh is None:
-        zeros = lambda: jnp.zeros(shape, dtype)  # noqa: E731
-    else:
+    specs = pool_leaf_specs(n_pages, page_size, cfg.n_kv_heads,
+                            cfg.resolved_head_dim, kv_dtype=kv_dtype,
+                            page_dtype=jnp.dtype(dtype).name, tp=tp)
+
+    def alloc(name):
+        shape, dt = specs[name]
+        shape = (cfg.n_periods,) + shape
+        if mesh is None:
+            return jnp.zeros(shape, dt)
         # allocate each shard directly on its owner — the pool is the
         # largest serving buffer, so a replicated-then-reshard zeros
         # would OOM device 0 at exactly the size TP makes fit
         sharding = PT.paged_pool_sharding(mesh, cfg.n_kv_heads,
-                                          stacked=True)
-        zeros = jax.jit(lambda: jnp.zeros(shape, dtype),
-                        out_shardings=sharding)
-    return tuple({"k_pages": zeros(), "v_pages": zeros()}
+                                          stacked=True,
+                                          scales=name.endswith("scales"))
+        return jax.jit(lambda: jnp.zeros(shape, dt),
+                       out_shardings=sharding)()
+    return tuple({name: alloc(name) for name in specs}
                  for _ in cfg.period)
+
+
+def _repack_pool(c):
+    """Cache → pool dict, carrying scale leaves iff the pool is int8."""
+    pool = {"k_pages": c.k_pages, "v_pages": c.v_pages}
+    if c.k_scales is not None:
+        pool["k_scales"] = c.k_scales
+        pool["v_scales"] = c.v_scales
+    return pool
 
 
 def decode_step_paged(params: Params, token: Array, pools, block_tables,
@@ -336,13 +353,14 @@ def decode_step_paged(params: Params, token: Array, pools, block_tables,
     ln = jnp.broadcast_to(lengths, (npd,) + lengths.shape)
     caches = tuple(
         L.PagedAttnCache(k_pages=pool["k_pages"], v_pages=pool["v_pages"],
-                         block_tables=bt, lengths=ln)
+                         block_tables=bt, lengths=ln,
+                         k_scales=pool.get("k_scales"),
+                         v_scales=pool.get("v_scales"))
         for pool in pools)
     x = L.apply_embedding(params["embed"], token, _dtype(run))
     x, new_caches, _ = _apply_stack(params, x, cfg, run,
                                     policy=run.softmax_policy, caches=caches)
-    new_pools = tuple({"k_pages": c.k_pages, "v_pages": c.v_pages}
-                      for c in new_caches)
+    new_pools = tuple(_repack_pool(c) for c in new_caches)
     return _head(params, cfg, x), new_pools
 
 
@@ -374,13 +392,14 @@ def prefill_chunk_paged(params: Params, tokens: Array, pools, block_tables,
     cl = jnp.broadcast_to(chunk_lens, (npd,) + chunk_lens.shape)
     caches = tuple(
         L.PagedPrefillCache(k_pages=pool["k_pages"], v_pages=pool["v_pages"],
-                            block_tables=bt, lengths=ln, chunk_lens=cl)
+                            block_tables=bt, lengths=ln, chunk_lens=cl,
+                            k_scales=pool.get("k_scales"),
+                            v_scales=pool.get("v_scales"))
         for pool in pools)
     x = L.apply_embedding(params["embed"], tokens, _dtype(run))
     x, new_caches, _ = _apply_stack(params, x, cfg, run,
                                     policy=run.softmax_policy, caches=caches)
-    new_pools = tuple({"k_pages": c.k_pages, "v_pages": c.v_pages}
-                      for c in new_caches)
+    new_pools = tuple(_repack_pool(c) for c in new_caches)
     last = jnp.clip(chunk_lens - 1, 0, None)[:, None, None]
     x_last = jnp.take_along_axis(x, jnp.broadcast_to(
         last, (x.shape[0], 1, x.shape[2])), axis=1)

@@ -77,6 +77,10 @@ class EngineConfig:
     prefill_chunk: int = 16          # prompt tokens per chunk program
     prefill_budget: int | None = None  # tokens per step (None → chunk)
     prefix_cache: bool = False       # copy-on-write prompt-prefix sharing
+    #: KV page-pool storage: None inherits ``RunConfig.kv_dtype``;
+    #: 'f32' / 'int8' override it for this engine (int8 = per-token ×
+    #: KV-head f32 scales, dequantized inside the paged kernels).
+    kv_dtype: str | None = None
     jit: bool = True
     mesh: object = None              # jax.sharding.Mesh | None
     shard_params: bool = False
@@ -207,7 +211,8 @@ class EngineStats:
 #: place of an :class:`EngineConfig` — exactly the old signature.
 _LEGACY_ENGINE_KWARGS = frozenset(
     f.name for f in dataclasses.fields(EngineConfig)) - {"prefix_cache",
-                                                         "pipeline_depth"}
+                                                         "pipeline_depth",
+                                                         "kv_dtype"}
 
 
 class ServingEngine:
@@ -284,9 +289,19 @@ class ServingEngine:
         if config.shard_params and config.mesh is None:
             raise ValueError("shard_params=True requires a mesh")
         from repro.runtime import partitioning as PT
+        from repro.runtime.paged_cache import KV_DTYPES
         self.config = config
         mesh = config.mesh
         cache = config.cache
+        # resolve the pool storage dtype: the engine knob (when set)
+        # overrides the run's, and the resolved value flows everywhere
+        # through ONE RunConfig — pools, scatter, attention dispatch
+        if config.kv_dtype is not None and config.kv_dtype != run.kv_dtype:
+            run = dataclasses.replace(run, kv_dtype=config.kv_dtype)
+        if run.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {run.kv_dtype!r}: expected one of "
+                f"{KV_DTYPES}")
         # Runtime mirror of the kernel guard's static overflow proof: the
         # integer Σ is accumulated in f32 (exact below 2^24), so rows may
         # carry at most max_lk = SIGMA_ACC_LIMIT // qmax keys.
@@ -383,8 +398,10 @@ class ServingEngine:
             # so without this the copy could silently re-layout the
             # sharded pool on its first trace
             pool_sh = jax.tree_util.tree_map(
-                lambda _: PT.paged_pool_sharding(mesh, model.cfg.n_kv_heads,
-                                                 stacked=True), self.pools)
+                lambda v: PT.paged_pool_sharding(mesh, model.cfg.n_kv_heads,
+                                                 stacked=True,
+                                                 scales=(v.ndim == 4)),
+                self.pools)
             self._copy_fn = jax.jit(copy_page_fn, donate_argnums=(0,),
                                     out_shardings=pool_sh)
         elif jit:
@@ -705,6 +722,7 @@ class PipelinedEngine(ServingEngine):
             raise ValueError(f"pipeline_depth {config.pipeline_depth} < 1")
         self.depth = config.pipeline_depth
         self._inflight: deque[_InflightStep] = deque()
+        run = self.run_cfg  # parent resolved the kv_dtype override
 
         # `greedy` is static under jit: an all-greedy batch compiles a
         # variant with no threefry/gumbel work at all (two traces max)
@@ -734,9 +752,11 @@ class PipelinedEngine(ServingEngine):
             from repro.runtime import partitioning as PT
             rep = PT.replicated_sharding(self.mesh)
             pool_sh = jax.tree_util.tree_map(
-                lambda _: PT.paged_pool_sharding(self.mesh,
+                lambda v: PT.paged_pool_sharding(self.mesh,
                                                  model.cfg.n_kv_heads,
-                                                 stacked=True), self.pools)
+                                                 stacked=True,
+                                                 scales=(v.ndim == 4)),
+                self.pools)
             self._decode_sampled_fn = jax.jit(
                 decode_sampled_fn, donate_argnums=(2,), static_argnums=(8,),
                 out_shardings=(rep, pool_sh))

@@ -13,7 +13,13 @@ and the Pallas kernel in ``kernels/lut_attention/paged_decode.py``):
 * each layer's pool is **page-major** ``(n_pages, page_size, KVH, Dh)``
   (:func:`pool_shape`) so one block-table entry addresses one contiguous
   page and the kernel can stream pages straight from HBM — no per-token
-  indirection, no contiguous per-slot gather;
+  indirection, no contiguous per-slot gather; with ``kv_dtype='int8'``
+  the pages store int8 and a parallel f32 scale pool
+  ``(n_pages, page_size, KVH)`` (:func:`scale_pool_shape`,
+  :func:`pool_leaf_specs`) shares the page-major leading axis, so every
+  page move (COW copy, 'pages'-regime sharding) moves page + scales
+  atomically and the device views (:func:`view_arrays` is field-generic)
+  need no new plumbing;
 * physical page 0 is the reserved **null page** — never allocated, the
   target of every unused block-table entry, so inactive slots and
   padding writes land in garbage space by construction;
@@ -62,6 +68,54 @@ def pool_shape(n_pages: int, page_size: int, n_kv_heads: int,
     there, so callers pass the mesh's tp unconditionally.
     """
     return (padded_n_pages(n_pages, tp), page_size, n_kv_heads, head_dim)
+
+
+#: the KV storage dtypes the pool contract admits (``RunConfig.kv_dtype``
+#: / ``EngineConfig.kv_dtype`` / ``serve.py --kv-dtype``)
+KV_DTYPES = ("f32", "int8")
+
+
+def scale_pool_shape(n_pages: int, page_size: int, n_kv_heads: int,
+                     tp: int = 1) -> tuple[int, int, int]:
+    """Layout of a quantization-scale pool: one f32 scale per pool row.
+
+    The int8 pool stores each ``(page, token, kv_head)`` row of
+    :func:`pool_shape` as int8 over ``Dh`` with one f32 scale — i.e. the
+    scale pool is the page pool minus its trailing head-dim axis.  Page
+    granularity is what the COW copy and the sharded regimes move
+    atomically (a page's scales live at the same leading index as the
+    page itself); within a page scales are per token × KV head, which
+    keeps the scatter a pure insert — appending a token never requants
+    its neighbours, so engine and lockstep see identical values
+    regardless of chunking or physical placement.
+    """
+    return (padded_n_pages(n_pages, tp), page_size, n_kv_heads)
+
+
+def pool_leaf_specs(n_pages: int, page_size: int, n_kv_heads: int,
+                    head_dim: int, *, kv_dtype: str = "f32",
+                    page_dtype: str = "float32",
+                    tp: int = 1) -> dict[str, tuple[tuple, str]]:
+    """``leaf name → (shape, dtype)`` contract of one layer's pool pytree.
+
+    Single source of truth for what ``init_paged_pools`` allocates and
+    what the paged kernels expect: ``f32`` pools are the historical
+    2-leaf ``{k_pages, v_pages}`` dict (dtype ``page_dtype``); ``int8``
+    pools add ``{k_scales, v_scales}`` f32 leaves laid out by
+    :func:`scale_pool_shape`.  Scales are zero-initialized — an
+    unwritten row dequantizes to exact 0, mirroring the zero-initialized
+    f32 pool.
+    """
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype {kv_dtype!r} not in {KV_DTYPES}")
+    pages = pool_shape(n_pages, page_size, n_kv_heads, head_dim, tp=tp)
+    if kv_dtype == "f32":
+        return {"k_pages": (pages, page_dtype),
+                "v_pages": (pages, page_dtype)}
+    scales = scale_pool_shape(n_pages, page_size, n_kv_heads, tp=tp)
+    return {"k_pages": (pages, "int8"), "v_pages": (pages, "int8"),
+            "k_scales": (scales, "float32"),
+            "v_scales": (scales, "float32")}
 
 
 class OutOfPagesError(RuntimeError):

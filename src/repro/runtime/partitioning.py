@@ -286,7 +286,8 @@ def mesh_model_tp(mesh: Mesh | None) -> int:
     return int(mesh.shape["model"])
 
 
-def paged_pool_pspec(mesh: Mesh | None, n_kv_heads: int) -> P:
+def paged_pool_pspec(mesh: Mesh | None, n_kv_heads: int,
+                     scales: bool = False) -> P:
     """Spec for one layer's page-major KV pool (n_pages, ps, KVH, Dh).
 
     KV heads take 'model' when divisible (the 'heads' regime of the
@@ -296,19 +297,27 @@ def paged_pool_pspec(mesh: Mesh | None, n_kv_heads: int) -> P:
     dispatcher in ``kernels/lut_attention/sharded_paged.py`` reduces
     only ``(B, H, 1)`` partials).  Mirrors ``cache_pspec``'s
     heads-else-length fallback for the contiguous lockstep cache.
+
+    ``scales=True`` gives the spec of the int8 pool's f32 scale leaf
+    ``(n_pages, ps, KVH)`` — the page spec minus its trailing Dh axis,
+    so scales always shard exactly with the pages they describe (the
+    'pages' regime keeps page+scale co-resident per slab; the 'heads'
+    regime splits both on KVH).
     """
     tp = mesh_model_tp(mesh)
     if tp <= 1:
         return P()
     if n_kv_heads % tp == 0:
-        return P(None, None, "model", None)
-    return P("model", None, None, None)
+        return P(None, None, "model") if scales \
+            else P(None, None, "model", None)
+    return P("model", None, None) if scales else P("model", None, None, None)
 
 
 def paged_pool_sharding(mesh: Mesh, n_kv_heads: int,
-                        stacked: bool = True) -> NamedSharding:
+                        stacked: bool = True,
+                        scales: bool = False) -> NamedSharding:
     """NamedSharding for a (periods-stacked) paged pool leaf."""
-    spec = paged_pool_pspec(mesh, n_kv_heads)
+    spec = paged_pool_pspec(mesh, n_kv_heads, scales=scales)
     if stacked:
         spec = P(None, *spec)
     return NamedSharding(mesh, spec)

@@ -304,9 +304,16 @@ def sync_engine():
 
 def test_single_device_contracts_all_pass():
     results = contracts.single_device_contracts()
-    assert len(results) == 5
+    assert len(results) == 8
     bad = {r.spec.name: r.violations for r in results if r.violations}
     assert not bad, bad
+    int8 = [r for r in results if r.spec.name.endswith("int8")]
+    assert len(int8) == 3
+    # the quantized pool doubles the donated leaf count (scales ride along)
+    assert all(r.spec.int8_dequant_clean for r in int8)
+    f32_donated = next(r.spec.min_donated for r in results
+                       if r.spec.name == "single/decode/rexp")
+    assert int8[0].spec.min_donated == 2 * f32_donated
 
 
 def test_breaking_donation_fails_contract(sync_engine):
@@ -374,6 +381,49 @@ def test_untagged_kernel_upcast_fails_contract(sync_engine):
     bad = contracts.check_artifacts(spec, bad_jaxpr, text)
     assert bad.status == "violation"
     assert any("lut-upcast" in v for v in bad.violations)
+
+
+def test_int8_dequant_clean_contract_and_negative():
+    """int8 decode steps convert int8→float only under dequant_scope;
+    a planted bare upcast of the quantized pool flips the contract."""
+    from repro.analysis import jaxpr_lint
+    from repro.kernels.common import dequant_scope
+
+    _, eng = contracts._build_engine(pipelined=False, impl="rexp",
+                                     kv_dtype="int8")
+    jaxpr, text = contracts._step_artifacts(eng, "decode")
+    spec = contracts.ContractSpec(
+        name="t/decode-int8", topology="single", step="decode",
+        policy="rexp", int8_dequant_clean=True)
+    assert contracts.check_artifacts(spec, jaxpr, text).status == "ok"
+    # the step really does dequantize (tagged converts exist)
+    tagged = [e for e in jaxpr_lint.iter_eqns(jaxpr)
+              if e.primitive.name == "convert_element_type"
+              and str(e.invars[0].aval.dtype) == "int8"
+              and "lut_dequant" in jaxpr_lint.eqn_scopes(e)]
+    assert tagged
+
+    def planted(params, token, pools, bt, lengths):
+        logits, pools = eng._decode_fn.__wrapped__(params, token, pools,
+                                                   bt, lengths)
+        leak = pools[0]["k_pages"].astype(jnp.float32)  # bare upcast
+        return logits + jnp.mean(leak), pools
+
+    bad_jaxpr = jax.make_jaxpr(planted)(*contracts._decode_args(eng))
+    bad = contracts.check_artifacts(spec, bad_jaxpr, text)
+    assert bad.status == "violation"
+    assert any("int8" in v and "dequant" in v for v in bad.violations)
+
+    # the sanctioned form of the same convert passes
+    def sanctioned(params, token, pools, bt, lengths):
+        logits, pools = eng._decode_fn.__wrapped__(params, token, pools,
+                                                   bt, lengths)
+        with dequant_scope():
+            leak = pools[0]["k_pages"].astype(jnp.float32)
+        return logits + jnp.mean(leak), pools
+
+    ok_jaxpr = jax.make_jaxpr(sanctioned)(*contracts._decode_args(eng))
+    assert contracts.check_artifacts(spec, ok_jaxpr, text).status == "ok"
 
 
 # ---------------------------------------------------------------------------

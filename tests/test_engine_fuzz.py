@@ -34,11 +34,12 @@ ROOMY = PagedCacheConfig(n_pages=40, page_size=4, max_pages_per_seq=8)
 TINY = PagedCacheConfig(n_pages=8, page_size=4, max_pages_per_seq=8)
 
 
-def _run_cfg(impl):
+def _run_cfg(impl, kv_dtype="f32"):
     pol = (SoftmaxPolicy(impl=impl, precision="uint8")
            if impl != "exact" else SoftmaxPolicy())
     return RunConfig(dtype="float32", attention_backend="naive",
-                     scan_layers=True, softmax_policy=pol)
+                     scan_layers=True, softmax_policy=pol,
+                     kv_dtype=kv_dtype)
 
 
 @pytest.fixture(scope="module")
@@ -252,6 +253,97 @@ def test_fuzz_batch_composition_invariance(tiny_lm):
                          prefill_chunk=CHUNK)).run([dict(kw)])
         np.testing.assert_array_equal(out[rid].tokens, solo[0].tokens,
                                       err_msg=f"request {rid}")
+
+
+# ---------------------------------------------------------------------------
+# Quantized (int8) KV pool: same schedules, halved pool bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["exact", "rexp", "lut2d"])
+@pytest.mark.parametrize("seed,cache", [(0, ROOMY), (5, TINY)])
+def test_fuzz_int8_schedule_matches_lockstep(tiny_lm, impl, seed, cache):
+    """Acceptance: the int8-pool engine decodes every fuzzed request
+    token-identically to int8 lockstep ``generate()`` — per-token scales
+    make quantization placement-independent, so chunked scatter into a
+    paged pool and contiguous lockstep writes quantize identically.
+    The ``EngineConfig.kv_dtype`` override path is exercised: the run
+    config says f32, the engine flips it to int8."""
+    model, params = tiny_lm
+    run = _run_cfg(impl)
+    rng = np.random.default_rng(seed)
+    sched = _schedule(rng, n_reqs=7, cache=cache)
+    eng = ServingEngine(model, params, run,
+                        EngineConfig(n_slots=2, cache=cache,
+                                     prefill_chunk=CHUNK, kv_dtype="int8"))
+    assert eng.run_cfg.kv_dtype == "int8"
+    assert eng.pools[0]["k_pages"].dtype == np.int8
+    assert eng.pools[0]["k_scales"].dtype == np.float32
+    out, rids = _drive(eng, sched)
+    assert sorted(out) == sorted(rids)
+    if cache is TINY:
+        assert eng.stats.preemptions > 0, \
+            "tiny pool never exercised eviction — fuzz lost its teeth"
+    assert eng.scheduler.allocator.n_free == cache.usable_pages
+    run_q = _run_cfg(impl, kv_dtype="int8")
+    for rid, (_, kw) in zip(rids, sched):
+        ref = np.asarray(generate(
+            model, params,
+            np.asarray(kw["prompt"], np.int32)[None], run_q,
+            max_new_tokens=kw["max_new_tokens"],
+            max_len=cache.max_context))[0]
+        np.testing.assert_array_equal(
+            out[rid].tokens, ref,
+            err_msg=f"seed {seed} impl {impl} request {rid}")
+
+
+@pytest.mark.parametrize("seed", [3, 6])
+def test_fuzz_int8_shared_prefix_cow_scales_travel(tiny_lm, seed):
+    """Acceptance: COW prefix sharing on the quantized pool — a copied
+    page's scales travel with it.  Shared-preamble schedules (duplicate
+    prompts force the copy-on-write) stay token-identical to int8
+    lockstep; a scale left behind would corrupt every token decoded
+    off the copied page."""
+    model, params = tiny_lm
+    run = _run_cfg("rexp", kv_dtype="int8")
+    rng = np.random.default_rng(seed)
+    sched = _shared_prefix_schedule(rng, n_reqs=7, cache=TINY)
+    eng = ServingEngine(model, params, run, EngineConfig(
+        n_slots=2, cache=TINY, prefill_chunk=CHUNK, prefix_cache=True))
+    out, rids = _drive(eng, sched)
+    assert sorted(out) == sorted(rids)
+    assert eng.stats.prefix_hit_tokens > 0, \
+        "schedule never hit the prefix cache — fuzz lost its teeth"
+    assert eng.stats.pages_shared > 0, \
+        "schedule never shared a page — the COW path went untested"
+    for rid, (_, kw) in zip(rids, sched):
+        ref = np.asarray(generate(
+            model, params,
+            np.asarray(kw["prompt"], np.int32)[None], run,
+            max_new_tokens=kw["max_new_tokens"],
+            max_len=TINY.max_context))[0]
+        np.testing.assert_array_equal(
+            out[rid].tokens, ref, err_msg=f"seed {seed} request {rid}")
+
+
+def test_fuzz_int8_pipelined_matches_sync(tiny_lm):
+    """The pipelined engine honors the quantized pool: same fuzzed
+    schedule, token-identical to the sync int8 engine."""
+    model, params = tiny_lm
+    run = _run_cfg("lut2d", kv_dtype="int8")
+    sched = _schedule(np.random.default_rng(4), n_reqs=6, cache=TINY,
+                      temperatures=(0.0, 0.9))
+    cfg = EngineConfig(n_slots=2, cache=TINY, prefill_chunk=CHUNK)
+    out_s, rids = _drive(ServingEngine(model, params, run, cfg),
+                         list(sched))
+    pipe = PipelinedEngine(model, params, run, cfg)
+    assert pipe.pools[0]["k_pages"].dtype == np.int8
+    out_p, _ = _drive(pipe, list(sched))
+    assert sorted(out_p) == sorted(rids)
+    for rid in out_s:
+        np.testing.assert_array_equal(
+            out_p[rid].tokens, out_s[rid].tokens,
+            err_msg=f"request {rid}")
 
 
 # ---------------------------------------------------------------------------

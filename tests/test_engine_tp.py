@@ -42,11 +42,12 @@ from repro.launch.mesh import make_serving_mesh
 mesh = make_serving_mesh(4)
 CACHE = PagedCacheConfig(n_pages=30, page_size=8, max_pages_per_seq=8)
 
-def run_cfg(impl):
+def run_cfg(impl, kv_dtype='f32'):
     pol = (SoftmaxPolicy(impl=impl, precision='uint8')
            if impl != 'exact' else SoftmaxPolicy())
     return RunConfig(dtype='float32', attention_backend='naive',
-                     scan_layers=True, softmax_policy=pol)
+                     scan_layers=True, softmax_policy=pol,
+                     kv_dtype=kv_dtype)
 
 def small_model(kvh, heads=4):
     arch = ARCHS['qwen3-32b'].scaled_down(d_model=64, n_heads=heads,
@@ -187,6 +188,79 @@ def test_tp_engine_token_identical_pages_regime():
     token-identical to the single-device engine."""
     assert "TP-IDENTITY-OK" in run_py(_ENGINE_IDENTITY.format(kvh=1,
                                                              heads=4))
+
+
+def test_tp_engine_int8_token_identical_both_regimes():
+    """Acceptance: the quantized pool on a 4-way mesh — scale leaves
+    sharded with their pages (KV-head axis in 'heads', page axis in
+    'pages'), scattered atomically with them — token-identical to the
+    single-device int8 engine in both regimes."""
+    out = run_py(r"""
+for kvh in (4, 1):                      # heads regime, then pages
+    arch, model, params = small_model(kvh)
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, 128, size=int(l)).tolist(), int(m))
+            for l, m in [(9, 7), (21, 6), (4, 8), (14, 5)]]
+    for impl in ['exact', 'rexp']:
+        run = run_cfg(impl, kv_dtype='int8')
+        cfg = EngineConfig(n_slots=3, cache=CACHE, prefill_chunk=5)
+        ref = ServingEngine(model, params, run, cfg).run(list(reqs))
+        tpe = ServingEngine(model, params, run,
+                            dataclasses.replace(cfg, mesh=mesh))
+        assert tpe.tp == 4
+        assert tpe.pools[0]['k_pages'].dtype == jnp.int8
+        assert tpe.pools[0]['k_scales'].dtype == jnp.float32
+        out = tpe.run(list(reqs))
+        for i in range(len(reqs)):
+            np.testing.assert_array_equal(
+                out[i].tokens, ref[i].tokens,
+                err_msg=f'{impl} request {i} (kvh={kvh})')
+print('TP-INT8-OK')
+""")
+    assert "TP-INT8-OK" in out
+
+
+def test_tp_engine_int8_prefix_cow_pages_regime():
+    """Acceptance: COW prefix sharing on the sharded *quantized* pool
+    (pages regime — the copy's src/dst pages generally live on
+    different device slabs): page AND scale move in one step, so every
+    request stays token-identical to the single-device int8 no-sharing
+    engine.  A scale left on the old slab would corrupt every token
+    decoded off the copied page."""
+    out = run_py(r"""
+arch, model, params = small_model(1)    # kvh=1 → pages regime
+run = run_cfg('lut2d', kv_dtype='int8')
+ps = CACHE.page_size
+rng = np.random.default_rng(11)
+pre = rng.integers(0, 128, size=2 * ps).tolist()
+reqs = [(pre + rng.integers(0, 128, size=t).tolist(), int(m))
+        for t, m in [(5, 6), (0, 7), (ps, 5), (0, 6), (3, 8)]]
+
+def drive(eng):
+    out = {}
+    for p, m in reqs:
+        eng.add_request(p, m)
+        for res in eng.step():
+            out[res.request_id] = res
+    while eng.scheduler.has_work():
+        for res in eng.step():
+            out[res.request_id] = res
+    return out
+
+ref = drive(ServingEngine(model, params, run,
+                          EngineConfig(n_slots=3, cache=CACHE)))
+tpe = ServingEngine(model, params, run,
+                    EngineConfig(n_slots=3, cache=CACHE, mesh=mesh,
+                                 prefix_cache=True))
+out = drive(tpe)
+assert tpe.stats.cow_copies > 0, 'duplicate prompts never forced a COW'
+assert tpe.stats.pages_shared > 0
+for i in range(len(reqs)):
+    np.testing.assert_array_equal(out[i].tokens, ref[i].tokens,
+                                  err_msg=f'request {i}')
+print('TP-INT8-COW-OK')
+""")
+    assert "TP-INT8-COW-OK" in out
 
 
 _PIPELINED_IDENTITY = r"""

@@ -133,7 +133,8 @@ def test_registry_clean_at_all_geometries(fresh_report):
     report = fresh_report
     assert report["n_violations"] == 0
     assert set(report["kernels"]) == {"lut_attention", "paged_decode",
-                                      "paged_prefill", "sharded_decode",
+                                      "paged_decode_int8", "paged_prefill",
+                                      "paged_prefill_int8", "sharded_decode",
                                       "sharded_paged"}
     for entry in report["kernels"].values():
         assert set(entry["geometries"]) == set(kg.GEOMETRIES)
@@ -182,6 +183,54 @@ def test_shrunk_budget_flips_vmem_contract():
     assert not ok
     bad, _ = kg.check_kernel(spec, limit=1024)  # budget shrunk under it
     assert any("VMEM working set" in v for v in bad)
+
+
+# ---------------------------------------------------------------------------
+# Quantized (int8) kernel declarations
+# ---------------------------------------------------------------------------
+
+
+def _streamed_bytes(ps):
+    """Double-buffered bytes of the operands that stream along the
+    innermost (page) axis — the pool traffic the quantized pools halve."""
+    return sum(2 * kg._block_bytes(op) for op in ps.inputs
+               if kg._varies_innermost(op, ps))
+
+
+@pytest.mark.parametrize("base", ["paged_decode", "paged_prefill"])
+@pytest.mark.parametrize("gname", sorted(kg.GEOMETRIES))
+def test_int8_streamed_vmem_at_most_055x(base, gname):
+    """int8 pages + f32 scales stream ≤ 0.55× the f32 pages' bytes.
+
+    Per page block the ratio is (ps·dh·1 + ps·4) / (ps·dh·4) =
+    (dh + 4) / (4·dh) — ≤ 0.32 for every shipped head dim, asserted at
+    the looser 0.55 criterion so a future scale-granularity change has
+    headroom without losing the headline.
+    """
+    reg = kg.kernel_registry(kg.GEOMETRIES[gname])
+    f32 = {p.name: p for p in reg[base].passes}
+    for ps in reg[base + "_int8"].passes:
+        ref = _streamed_bytes(f32[ps.name])
+        quant = _streamed_bytes(ps)
+        assert ref > 0
+        assert quant <= 0.55 * ref, (base, gname, ps.name, quant, ref)
+
+
+@pytest.mark.parametrize("base", ["paged_decode", "paged_prefill"])
+def test_int8_clean_and_scale_less_spec_flips_contract(base):
+    """The shipped int8 spec passes the guard; the same spec with its
+    scale operands stripped flips the quantized-pairing contract."""
+    spec = kg.kernel_registry(TEST_GEOM)[base + "_int8"]
+    violations, info = kg.check_kernel(spec)
+    assert not violations
+    assert all(any(op.dtype == "int8" for op in ps.inputs)
+               for ps in spec.passes)
+    stripped = dataclasses.replace(spec, passes=tuple(
+        dataclasses.replace(ps, inputs=tuple(
+            op for op in ps.inputs if "scale" not in op.name))
+        for ps in spec.passes))
+    v, _ = kg.check_kernel(stripped)
+    assert any("no float32 scale operand" in x for x in v)
 
 
 # ---------------------------------------------------------------------------

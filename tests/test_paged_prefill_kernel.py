@@ -327,6 +327,19 @@ def test_dispatch_matrix_docs_match_resolvers():
         "README lost the mesh rows of the dispatch matrix"
     assert "`heads` regime" in readme and "`pages` regime" in readme
 
+    # ... and the quantized rows: int8 pages keep the same matrix shape
+    # (fused kernels stream scales + dequant in VMEM; dense paths
+    # dequantize the gathered view; mesh shards scales with pages)
+    for needle in ("``int8`` + fused kernel", "``int8`` + dense / mesh",
+                   "kernel_spec_int8"):
+        assert needle in ops_doc, f"ops.py docstring lost {needle!r}"
+    assert "kv_dtype=int8" in pkg_doc
+    assert "scales shard with their pages" in pkg_doc
+    assert "| any knob + `--kv-dtype int8` |" in readme \
+        and "| `--kv-dtype int8` + `mesh` (tp > 1) |" in readme, \
+        "README lost the quantized rows of the dispatch matrix"
+    assert "Quantized KV pool (`--kv-dtype int8`)" in readme
+
 
 # ---------------------------------------------------------------------------
 # Property: block-table permutation invariance (shared machinery in
